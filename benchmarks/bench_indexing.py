@@ -1,0 +1,43 @@
+"""Paper Fig. 3 — WAH index build time vs input size: data-parallel device
+pipeline vs the sequential CPU builder. The reproduced claim is the
+qualitative one (§4.2): both scale linearly, the data-parallel build wins
+at scale, and the output index is identical."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.indexing import build_wah_index, build_wah_index_numpy
+
+from .common import emit
+
+_CARD = 64
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for n in (10_000, 100_000, 1_000_000):
+        values = rng.integers(0, _CARD, n).astype(np.uint32)
+        vj = jnp.asarray(values)
+        # warm (compile)
+        build_wah_index(vj, _CARD)[1].block_until_ready()
+        t0 = time.perf_counter()
+        words, n_words, starts, counts = build_wah_index(vj, _CARD)
+        n_words.block_until_ready()
+        t_dev = time.perf_counter() - t0
+
+        t_cpu = None
+        if n <= 100_000:  # sequential builder is O(n·card); cap runtime
+            t0 = time.perf_counter()
+            ref_words, ref_n, _, _ = build_wah_index_numpy(values, _CARD)
+            t_cpu = time.perf_counter() - t0
+            assert int(n_words) == ref_n
+        emit(f"wah_index_build_n{n}", t_dev * 1e6,
+             f"Mvals_per_s={n / t_dev / 1e6:.2f}" +
+             (f";cpu_s={t_cpu:.3f};speedup={t_cpu / t_dev:.1f}x" if t_cpu else ""))
+
+
+if __name__ == "__main__":
+    run()

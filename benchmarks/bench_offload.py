@@ -1,0 +1,65 @@
+"""Paper Figs. 7/8 — heterogeneous offload sweep: a Mandelbrot frame is
+split between a "host" worker pool and a "device" worker pool, the device
+fraction swept 0→100 % in 10 % steps. On this container both pools are CPU
+threads (host = interpreted row loop via numpy, device = jitted kernel) so
+the absolute numbers differ from the paper's GPUs, but the *shape* of the
+curve — monotone decline while offloading to the faster pool, with the
+100 %-device time as the floor — is the reproduced claim."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ActorSystem, split_offload
+from repro.kernels import ops
+
+from .common import emit
+
+_W, _H, _IT = 256, 128, 100
+_VIEW = dict(re_min=-0.5, re_max=0.1, im_min=-0.7375, im_max=-0.1375)
+
+
+def _host_rows(start: int, rows: int) -> np.ndarray:
+    """'Host' pool: the un-jitted pure-jnp oracle path (op-by-op dispatch —
+    naturally slower than the kernel; bit-identical per the kernel tests)."""
+    return np.asarray(ops.mandelbrot(height=rows, width=_W, max_iter=_IT,
+                                     row_offset=start, total_height=_H,
+                                     impl="ref", **_VIEW))
+
+
+def _device_rows(start: int, rows: int) -> np.ndarray:
+    return np.asarray(ops.mandelbrot(height=rows, width=_W, max_iter=_IT,
+                                     row_offset=start, total_height=_H,
+                                     impl="pallas", **_VIEW))
+
+
+def run() -> None:
+    import time
+    with ActorSystem(max_workers=4) as system:
+        # workers take (start, rows) and render their row slice
+        host = system.spawn(lambda s, n: _host_rows(s, n))
+        dev = system.spawn(lambda s, n: _device_rows(s, n))
+
+        full_ref = _host_rows(0, _H)
+        for pct in range(0, 101, 10):
+            frac = pct / 100.0
+            t0 = time.perf_counter()
+            img = split_offload(
+                [dev, host], [frac, 1.0 - frac],
+                make_payload=lambda s, n: (s, n),
+                sizes_of=lambda fr: [round(_H * fr[0]),
+                                     _H - round(_H * fr[0])],
+                combine=lambda parts: np.vstack(parts))
+            dt = time.perf_counter() - t0
+            # Structural integrity: no dropped/duplicated rows. Boundary
+            # pixels may differ by a few iterations between pools (f32
+            # escape-time chaos under different fusion orders — the paper's
+            # CPU/GPU pools have the same property), so require ≥98 % exact.
+            assert img.shape == full_ref.shape
+            match = np.mean(img == full_ref)
+            assert match > 0.98, f"offload split broke output ({match:.3f})"
+            emit(f"mandelbrot_offload_{pct:03d}pct", dt * 1e6,
+                 f"rows_device={round(_H * frac)};pixel_match={match:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 5 — single-calculation overhead of the actor facade vs the
+native API (here: a direct jitted call). The paper's claim: the difference
+is milliseconds-scale and independent of problem size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ActorSystem, In, NDRange, Out, dim_vec
+from repro.kernels import ops
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    with ActorSystem(max_workers=4) as system:
+        mngr = system.opencl_manager()
+        for n in (256, 512, 1024):
+            a = np.random.default_rng(0).random((n, n), np.float32)
+            b = np.random.default_rng(1).random((n, n), np.float32)
+
+            native = jax.jit(lambda x, y: ops.ref.matmul(x, y))
+            aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+            def native_call():
+                native(aj, bj).block_until_ready()
+
+            worker = mngr.spawn(ops.ref.matmul, f"m_mult_{n}",
+                                NDRange(dim_vec(n, n)),
+                                In(jnp.float32), In(jnp.float32),
+                                Out(jnp.float32, shape=(n, n)))
+
+            def actor_call():
+                worker.ask(a, b)
+
+            t_native = timeit(native_call, repeat=7)
+            t_actor = timeit(actor_call, repeat=7)
+            overhead_ms = (t_actor - t_native) * 1e3
+            emit(f"overhead_matmul_{n}", t_actor * 1e6,
+                 f"native_us={t_native * 1e6:.1f};overhead_ms={overhead_ms:.2f}")
+
+
+if __name__ == "__main__":
+    run()

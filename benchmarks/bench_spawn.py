@@ -1,0 +1,50 @@
+"""Paper Fig. 4 — wall-clock time to spawn N kernel actors vs N plain
+(event-based) actors. Both are lazy-initialized; after spawning we round-
+trip one message through the last actor (as the paper does)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ActorSystem, In, NDRange, Out, dim_vec
+
+from .common import emit
+
+
+def _spawn_kernel_actors(n: int) -> float:
+    t0 = time.perf_counter()
+    with ActorSystem(max_workers=4) as system:
+        mngr = system.opencl_manager()
+        rng = NDRange(dim_vec(64))
+        last = None
+        for _ in range(n):
+            last = mngr.spawn(lambda x: x + 1.0, "inc", rng,
+                              In(jnp.float32), Out(jnp.float32))
+        last.ask(np.zeros(64, np.float32))
+        return time.perf_counter() - t0
+
+
+def _spawn_plain_actors(n: int) -> float:
+    t0 = time.perf_counter()
+    with ActorSystem(max_workers=4) as system:
+        last = None
+        for _ in range(n):
+            last = system.spawn(lambda x: x + 1)
+        last.ask(0)
+        return time.perf_counter() - t0
+
+
+def run() -> None:
+    for n in (100, 500, 1000):
+        tk = _spawn_kernel_actors(n)
+        tp = _spawn_plain_actors(n)
+        emit(f"spawn_kernel_actors_n{n}", tk / n * 1e6,
+             f"total_s={tk:.3f}")
+        emit(f"spawn_plain_actors_n{n}", tp / n * 1e6,
+             f"total_s={tp:.3f};kernel/plain={tk / tp:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, *, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

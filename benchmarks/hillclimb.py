@@ -1,0 +1,64 @@
+"""§Perf hillclimb driver: re-lower one cell with plan overrides and diff
+the roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch llama3-8b --shape train_4k \
+        --plan '{"remat": "dots", "seq_activations": true}' [--save NAME]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--plan", default="{}")
+    ap.add_argument("--save", default=None,
+                    help="persist result as experiments/perf/<NAME>.json")
+    ap.add_argument("--baseline",
+                    default=None, help="baseline json (default: dryrun cell)")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun_lib
+    from repro.launch.mesh import make_production_mesh
+
+    base_path = args.baseline or \
+        f"experiments/dryrun/{args.arch}__{args.shape}__1pod-256.json"
+    base = json.load(open(base_path))["roofline"]
+
+    mesh = make_production_mesh()
+    rep = dryrun_lib.lower_cell(args.arch, args.shape, mesh, "1pod-256",
+                                plan_overrides=json.loads(args.plan))
+    rl = rep["roofline"]
+
+    print(f"\n{args.arch} {args.shape}  plan={rep['plan']}")
+    print(f"{'term':12s} {'baseline':>12s} {'new':>12s} {'delta':>8s}")
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b, n = base[term], rl[term]
+        print(f"{term:12s} {b:12.4f} {n:12.4f} {100 * (n - b) / b:+7.1f}%")
+    print(f"{'bottleneck':12s} {base['bottleneck']:>12s} {rl['bottleneck']:>12s}")
+    print(f"{'roofline%':12s} {100 * base['roofline_fraction']:12.2f} "
+          f"{100 * rl['roofline_fraction']:12.2f}")
+    mem = rl.get("memory_per_device", {})
+    print(f"temp_GB={mem.get('temp_size_in_bytes', 0) / 1e9:.1f} "
+          f"args_GB={mem.get('argument_size_in_bytes', 0) / 1e9:.1f}")
+    bb = rl.get("bytes_by_opcode", {})
+    tot = sum(bb.values()) or 1
+    tops = sorted(bb.items(), key=lambda kv: -kv[1])[:5]
+    print("traffic: " + "  ".join(f"{k}={v / 1e9:.0f}GB({100 * v / tot:.0f}%)"
+                                  for k, v in tops))
+    cb = rl.get("collective_bytes", {})
+    print("collectives: " + "  ".join(f"{k}={v / 1e9:.0f}GB"
+                                      for k, v in cb.items()))
+    if args.save:
+        os.makedirs("experiments/perf", exist_ok=True)
+        with open(f"experiments/perf/{args.save}.json", "w") as f:
+            json.dump(rep, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Render the dry-run roofline artifacts as the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_reports(dirname: str = DRYRUN_DIR) -> List[Dict]:
+    reports = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            reports.append(json.load(f))
+    return reports
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def table(reports: List[Dict], mesh: str = "1pod-256") -> str:
+    rows = ["| arch | shape | kind | compute | memory | collective | "
+            "bottleneck | useful/HLO | roofline-frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in reports:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"skipped | — | — |")
+            continue
+        if r["status"] != "compiled":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"**{r['status']}** | — | — |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_seconds(rl['compute_s'])} | {fmt_seconds(rl['memory_s'])} | "
+            f"{fmt_seconds(rl['collective_s'])} | {rl['bottleneck']} | "
+            f"{rl['useful_flops_ratio']:.2f} | {rl['roofline_fraction']:.2%} |")
+    return "\n".join(rows)
+
+
+def run() -> None:
+    reports = load_reports()
+    if not reports:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    print(table(reports))
+    compiled = [r for r in reports if r["status"] == "compiled"]
+    failed = [r for r in reports if r["status"] == "FAILED"]
+    print(f"\ncompiled={len(compiled)} failed={len(failed)} "
+          f"skipped={len(reports) - len(compiled) - len(failed)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper figure (3, 4, 5, 6, 7/8) plus
+the roofline table from the dry-run artifacts."""
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_indexing, bench_iterated, bench_offload,
+                   bench_overhead, bench_spawn)
+    for mod in (bench_spawn, bench_overhead, bench_iterated, bench_offload,
+                bench_indexing):
+        mod.run()
+    print("\n== roofline table (from dry-run artifacts) ==")
+    from . import roofline_table
+    roofline_table.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Batched greedy serving through a kernel actor: the decode step (one
+token across a request batch, KV cache resident) is wrapped in an actor,
+so requests flow in as messages and the cache never leaves the device —
+the paper's resident-memory pipeline applied to LM decoding.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import Actor, ActorSystem
+from repro.dist import step as step_mod
+from repro.models import Model
+
+
+class DecodeActor(Actor):
+    """Owns params + KV cache; each message decodes one step for the batch."""
+
+    def __init__(self, model: Model, params, batch: int, max_len: int):
+        super().__init__()
+        self.model = model
+        self.params = params
+        self.cache = model.init_cache(batch, max_len)
+        self.step = jax.jit(step_mod.build_serve_step(model))
+
+    def receive(self, tokens):
+        nxt, logits, self.cache = self.step(self.params, self.cache,
+                                            jnp.asarray(tokens))
+        return np.asarray(nxt)
+
+
+def main() -> None:
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch, steps = 8, 32
+
+    with ActorSystem() as system:
+        decoder = system.spawn(DecodeActor(model, params, batch, steps + 1))
+        toks = np.zeros((batch, 1), np.int32)
+        outputs = [toks]
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            toks = decoder.ask(toks)
+            outputs.append(toks)
+        dt = time.perf_counter() - t0
+        seqs = np.concatenate(outputs, axis=1)
+        print(f"decoded {steps} steps × {batch} requests in {dt:.2f}s "
+              f"({steps * batch / dt:.0f} tok/s)")
+        print("first sequence:", seqs[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

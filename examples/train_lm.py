@@ -1,0 +1,83 @@
+"""End-to-end training driver: train a small LM with the full substrate —
+deterministic data pipeline, AdamW + warmup-cosine, checkpointing, and
+actor-supervised recovery (a fault is injected mid-run and training
+resumes from the last checkpoint, bit-exactly).
+
+Defaults are CPU-sized; pass ``--arch`` and ``--steps`` to scale up
+(e.g. ``--d-model 768 --layers 12`` ≈ a 100M-class model).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+
+from repro import configs
+from repro.core import ActorSystem
+from repro.data import SyntheticLM
+from repro.dist import fault, step as step_mod
+from repro.models import Model
+from repro.optim import AdamWConfig, schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b",
+                    choices=configs.list_archs())
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a worker fault at this step (demo)")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    repl = {}
+    if args.d_model:
+        repl.update(d_model=args.d_model,
+                    head_dim=args.d_model // max(cfg.n_heads, 1),
+                    d_ff=args.d_model * 3)
+    if args.layers:
+        repl.update(n_layers=args.layers)
+    if repl:
+        cfg = dataclasses.replace(cfg, **repl)
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"~{cfg.param_count() / 1e6:.1f}M params")
+
+    model = Model(cfg)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.01)
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq, seed=0, noise=0.02)
+    sched = schedule.warmup_cosine(args.steps // 10 + 1, args.steps)
+    train_step = jax.jit(step_mod.build_train_step(model, ocfg,
+                                                   lr_schedule=sched))
+    state = step_mod.init_train_state(model, jax.random.key(0), ocfg)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir, ActorSystem() as system:
+        trainer = fault.RecoverableTrainer(system, train_step, state, data,
+                                           ckpt_dir, ckpt_every=10)
+        t0 = time.perf_counter()
+        fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+        final = trainer.run(args.steps, fail_at=fail_at)
+        dt = time.perf_counter() - t0
+        # report the loss trajectory by re-evaluating a few checkpoints
+        loss0 = float(model.loss(state["params"],
+                                 {k: jax.numpy.asarray(v)
+                                  for k, v in data.batch_at(0).items()})[0])
+        lossN = float(model.loss(final["params"],
+                                 {k: jax.numpy.asarray(v)
+                                  for k, v in data.batch_at(0).items()})[0])
+        tok_s = args.steps * args.batch * args.seq / dt
+        print(f"steps={int(final['step'])} recoveries={trainer.recoveries} "
+              f"(fault injected at step {fail_at})")
+        print(f"loss: {loss0:.3f} → {lossN:.3f}  ({tok_s:,.0f} tok/s wall)")
+        assert lossN < loss0, "training failed to reduce loss"
+        print("OK: loss decreased; recovery transparent")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""The paper's contribution: OpenCL-style kernel actors for JAX/TPU.
+
+Public API mirrors the paper's CAF additions:
+
+    from repro.core import ActorSystem, NDRange, dim_vec, In, Out, InOut
+
+    sys_ = ActorSystem()
+    mngr = sys_.opencl_manager()
+    worker = mngr.spawn(m_mult, "m_mult", NDRange(dim_vec(n, n)),
+                        In(jnp.float32), In(jnp.float32), Out(jnp.float32))
+    result = worker.ask(a, b)
+"""
+from .actor import Actor, ActorRef, ActorSystem, Message
+from .compose import ComposedActor, compose, fuse
+from .errors import (ActorError, ActorFailed, DownMessage, ExitMessage,
+                     MailboxClosed, SignatureMismatch)
+from .facade import KernelActor
+from .manager import Device, DeviceManager, Platform, Program
+from .memref import DeviceRef, as_device_array, live_ref_count
+from .scheduler import ChunkScheduler, split_offload
+from .signature import In, InOut, KernelSignature, Local, NDRange, Out, Priv, dim_vec
+
+__all__ = [
+    "Actor", "ActorRef", "ActorSystem", "Message",
+    "ComposedActor", "compose", "fuse",
+    "ActorError", "ActorFailed", "DownMessage", "ExitMessage",
+    "MailboxClosed", "SignatureMismatch",
+    "KernelActor",
+    "Device", "DeviceManager", "Platform", "Program",
+    "DeviceRef", "as_device_array", "live_ref_count",
+    "ChunkScheduler", "split_offload",
+    "In", "InOut", "KernelSignature", "Local", "NDRange", "Out", "Priv", "dim_vec",
+]

@@ -1,0 +1,320 @@
+"""A CAF-style actor runtime in Python (paper §2.1, §3.2).
+
+Actors are sub-thread entities with mailboxes, run by a cooperative
+scheduler (a shared thread pool approximating CAF's work-stealing
+scheduler). They communicate exclusively by asynchronous message passing:
+
+* ``send``     — fire-and-forget (CAF ``send``)
+* ``request``  — returns a future for the response (CAF ``request``)
+* behaviors may return a *promise* (another future) to delegate the
+  response to a different actor — the mechanism the paper's composition
+  builds on ("actors may return a 'promise' ... delegated to another actor
+  which then becomes responsible for responding to the sender", §3.5).
+
+Fault tolerance (paper §2.1): actors can ``monitor`` each other (the
+runtime delivers a :class:`DownMessage` on termination) or ``link``
+(bidirectional, delivers :class:`ExitMessage`, killing the receiver unless
+it traps exits). This is the substrate the distributed supervisor in
+``repro.dist.fault`` uses for checkpoint/restart.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import traceback
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Optional, Tuple
+
+from .errors import ActorFailed, DownMessage, ExitMessage, MailboxClosed
+
+__all__ = ["Actor", "ActorRef", "ActorSystem", "Message"]
+
+_MAX_MSGS_PER_SLICE = 16  # fairness: yield the worker thread periodically
+
+
+class Message:
+    __slots__ = ("payload", "reply_to", "sender")
+
+    def __init__(self, payload: Tuple[Any, ...], reply_to: Optional[Future] = None,
+                 sender: Optional["ActorRef"] = None):
+        self.payload = payload
+        self.reply_to = reply_to
+        self.sender = sender
+
+
+class ActorRef:
+    """Network-transparent actor handle (paper: OpenCL actors "use the same
+    handle type as actors running on the CPU")."""
+
+    __slots__ = ("actor_id", "_system",)
+
+    def __init__(self, actor_id: int, system: "ActorSystem"):
+        self.actor_id = actor_id
+        self._system = system
+
+    # -- messaging ------------------------------------------------------
+    def send(self, *payload: Any, sender: Optional["ActorRef"] = None) -> None:
+        self._system._enqueue(self.actor_id, Message(payload, None, sender))
+
+    def request(self, *payload: Any) -> Future:
+        fut: Future = Future()
+        self._system._enqueue(self.actor_id, Message(payload, fut, None))
+        return fut
+
+    def ask(self, *payload: Any, timeout: Optional[float] = 120.0) -> Any:
+        """Synchronous request/receive (paper's ``scoped_actor`` pattern)."""
+        return self.request(*payload).result(timeout=timeout)
+
+    # -- supervision ------------------------------------------------------
+    def monitor(self, watcher: "ActorRef") -> None:
+        self._system.monitor(watcher, self)
+
+    def link(self, other: "ActorRef") -> None:
+        self._system.link(self, other)
+
+    def exit(self, reason: Any = None) -> None:
+        self._system._terminate(self.actor_id, reason)
+
+    def is_alive(self) -> bool:
+        return self._system._is_alive(self.actor_id)
+
+    # -- composition ------------------------------------------------------
+    def __mul__(self, other: "ActorRef") -> "ActorRef":
+        """``C = B * A`` applies ``A`` first, then ``B`` (paper §3.5,
+        Listing 5: ``fuse = move_elems * count_elems * prepare``)."""
+        from .compose import compose  # local import: avoid cycle
+        return compose(self._system, other, self)
+
+    def __repr__(self):
+        return f"ActorRef#{self.actor_id}"
+
+
+class Actor:
+    """Base class; subclasses override :meth:`receive`."""
+
+    def __init__(self):
+        self.ref: Optional[ActorRef] = None
+        self.system: Optional["ActorSystem"] = None
+        self.trap_exit = False
+
+    def receive(self, *payload: Any) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def on_start(self) -> None:
+        """Hook run before the first message (lazy init, paper §5.1)."""
+
+    def on_exit(self, reason: Any) -> None:
+        """Cleanup hook."""
+
+
+class _FunctionActor(Actor):
+    def __init__(self, fn: Callable[..., Any]):
+        super().__init__()
+        self._fn = fn
+
+    def receive(self, *payload: Any) -> Any:
+        return self._fn(*payload)
+
+
+class _ActorState:
+    __slots__ = ("actor", "mailbox", "lock", "scheduled", "alive", "reason",
+                 "monitors", "links", "started")
+
+    def __init__(self, actor: Actor):
+        self.actor = actor
+        self.mailbox: deque = deque()
+        self.lock = threading.Lock()
+        self.scheduled = False
+        self.alive = True
+        self.reason: Any = None
+        self.monitors: list = []   # ActorRefs to notify with DownMessage
+        self.links: list = []      # ActorRefs to notify with ExitMessage
+        self.started = False
+
+
+class ActorSystem:
+    """Owns actors, the scheduler, and (via ``opencl_manager``) devices.
+
+    Mirrors CAF's ``actor_system``: create one, optionally load the device
+    module, spawn actors, shut down.
+    """
+
+    def __init__(self, name: str = "repro", max_workers: int = 8):
+        self.name = name
+        self._executor = ThreadPoolExecutor(max_workers=max_workers,
+                                            thread_name_prefix=f"{name}-sched")
+        self._actors: dict[int, _ActorState] = {}
+        self._ids = itertools.count(1)
+        self._registry_lock = threading.Lock()
+        self._shutdown = False
+        self._manager = None
+        self.stats = {"spawned": 0, "messages": 0}
+
+    # -- spawning ------------------------------------------------------
+    def spawn(self, behavior, *args, lazy_init: bool = True, **kwargs) -> ActorRef:
+        """Create an actor from a function or an :class:`Actor` subclass
+        (paper §2.1: "actors are created using the function spawn")."""
+        if isinstance(behavior, Actor):
+            actor = behavior
+        elif isinstance(behavior, type) and issubclass(behavior, Actor):
+            actor = behavior(*args, **kwargs)
+        elif callable(behavior):
+            actor = _FunctionActor(behavior)
+        else:
+            raise TypeError(f"cannot spawn {behavior!r}")
+        with self._registry_lock:
+            if self._shutdown:
+                raise MailboxClosed("actor system is shut down")
+            aid = next(self._ids)
+            state = _ActorState(actor)
+            self._actors[aid] = state
+            self.stats["spawned"] += 1
+        ref = ActorRef(aid, self)
+        actor.ref = ref
+        actor.system = self
+        if not lazy_init:
+            actor.on_start()
+            state.started = True
+        return ref
+
+    def opencl_manager(self):
+        """Device-module accessor named after the paper's
+        ``system.opencl_manager()`` (Listing 2)."""
+        if self._manager is None:
+            from .manager import DeviceManager
+            self._manager = DeviceManager(self)
+        return self._manager
+
+    # -- supervision ------------------------------------------------------
+    def monitor(self, watcher: ActorRef, target: ActorRef) -> None:
+        st = self._actors.get(target.actor_id)
+        if st is None or not st.alive:
+            watcher.send(DownMessage(target.actor_id, st.reason if st else None))
+            return
+        with st.lock:
+            st.monitors.append(watcher)
+
+    def link(self, a: ActorRef, b: ActorRef) -> None:
+        for x, y in ((a, b), (b, a)):
+            st = self._actors.get(x.actor_id)
+            if st is not None and st.alive:
+                with st.lock:
+                    st.links.append(y)
+
+    # -- scheduling internals ----------------------------------------------
+    def _enqueue(self, actor_id: int, msg: Message) -> None:
+        st = self._actors.get(actor_id)
+        if st is None or not st.alive:
+            if msg.reply_to is not None:
+                msg.reply_to.set_exception(
+                    ActorFailed(f"actor #{actor_id} is not alive"))
+            return
+        self.stats["messages"] += 1
+        with st.lock:
+            st.mailbox.append(msg)
+            if st.scheduled or not st.alive:
+                return
+            st.scheduled = True
+        self._executor.submit(self._drain, actor_id)
+
+    def _drain(self, actor_id: int) -> None:
+        st = self._actors.get(actor_id)
+        if st is None:
+            return
+        processed = 0
+        while True:
+            with st.lock:
+                if not st.mailbox or not st.alive or processed >= _MAX_MSGS_PER_SLICE:
+                    if st.mailbox and st.alive:
+                        # re-submit for fairness instead of hogging the worker
+                        self._executor.submit(self._drain, actor_id)
+                    else:
+                        st.scheduled = False
+                    return
+                msg = st.mailbox.popleft()
+            processed += 1
+            self._process(st, actor_id, msg)
+
+    def _process(self, st: _ActorState, actor_id: int, msg: Message) -> None:
+        actor = st.actor
+        try:
+            if not st.started:
+                actor.on_start()
+                st.started = True
+            if isinstance(msg.payload, tuple) and len(msg.payload) == 1 and \
+                    isinstance(msg.payload[0], ExitMessage) and not actor.trap_exit:
+                self._terminate(actor_id, msg.payload[0].reason)
+                return
+            result = actor.receive(*msg.payload)
+        except Exception as exc:  # abnormal termination → fault propagation
+            if msg.reply_to is not None:
+                msg.reply_to.set_exception(exc)
+            traceback.clear_frames(exc.__traceback__) if exc.__traceback__ else None
+            self._terminate(actor_id, exc)
+            return
+        if msg.reply_to is None:
+            return
+        if isinstance(result, Future):
+            # response promise: delegate (paper §3.5)
+            _chain_future(result, msg.reply_to)
+        else:
+            if not msg.reply_to.cancelled():
+                msg.reply_to.set_result(result)
+
+    def _terminate(self, actor_id: int, reason: Any) -> None:
+        st = self._actors.get(actor_id)
+        if st is None:
+            return
+        with st.lock:
+            if not st.alive:
+                return
+            st.alive = False
+            st.reason = reason
+            pending = list(st.mailbox)
+            st.mailbox.clear()
+            monitors, links = list(st.monitors), list(st.links)
+        for msg in pending:
+            if msg.reply_to is not None:
+                msg.reply_to.set_exception(ActorFailed(
+                    f"actor #{actor_id} terminated: {reason!r}"))
+        try:
+            st.actor.on_exit(reason)
+        except Exception:  # pragma: no cover - cleanup must not crash runtime
+            pass
+        for m in monitors:
+            m.send(DownMessage(actor_id, reason))
+        for l in links:
+            l.send(ExitMessage(actor_id, reason))
+
+    def _is_alive(self, actor_id: int) -> bool:
+        st = self._actors.get(actor_id)
+        return bool(st and st.alive)
+
+    # -- lifecycle ------------------------------------------------------
+    def shutdown(self, wait: bool = True) -> None:
+        with self._registry_lock:
+            self._shutdown = True
+            ids = list(self._actors)
+        for aid in ids:
+            self._terminate(aid, None)
+        self._executor.shutdown(wait=wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+
+def _chain_future(src: Future, dst: Future) -> None:
+    def _done(f: Future):
+        if dst.cancelled():
+            return
+        exc = f.exception()
+        if exc is not None:
+            dst.set_exception(exc)
+        else:
+            dst.set_result(f.result())
+    src.add_done_callback(_done)

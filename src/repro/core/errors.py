@@ -1,0 +1,42 @@
+"""Failure/exit message types for actor supervision (paper §2.1).
+
+The actor model addresses fault-tolerance by letting actors monitor each
+other: when an actor dies, the runtime sends a ``DownMessage`` to every
+monitor and an ``ExitMessage`` to every link (bidirectional monitor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+class ActorError(Exception):
+    """Base class for actor-runtime errors."""
+
+
+class ActorFailed(ActorError):
+    """Raised when requesting from an actor that terminated abnormally."""
+
+
+class MailboxClosed(ActorError):
+    """Message sent to an actor that already terminated."""
+
+
+class SignatureMismatch(ActorError):
+    """Message payload does not match the kernel signature (paper §3.4)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DownMessage:
+    """Sent to monitors when a watched actor terminates (paper §2.1)."""
+
+    actor_id: int
+    reason: Any  # None for normal termination, the exception otherwise
+
+
+@dataclasses.dataclass(frozen=True)
+class ExitMessage:
+    """Sent over links; by default kills the receiver unless it traps exits."""
+
+    actor_id: int
+    reason: Any

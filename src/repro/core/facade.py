@@ -1,0 +1,168 @@
+"""``actor_facade`` — wrap a data-parallel kernel as an actor (paper §3.2).
+
+Whenever the facade receives a message it (paper's three-part behavior,
+§3.6):
+
+1. runs the **pre-processing** function (default: pattern-match the payload
+   against all ``In``/``InOut`` declarations and move host data to the
+   device),
+2. dispatches the **kernel** — a jit-compiled JAX/Pallas callable bound to
+   this actor's device. JAX dispatch is asynchronous: the returned arrays
+   are futures for device buffers, reproducing the paper's
+   ``clEnqueueNDRangeKernel`` + event pipeline (Listing 4) — downstream
+   actors can be messaged *before* the kernel finishes,
+3. runs the **post-processing** function (default: wrap each
+   ``Out``/``InOut`` result as a value — explicit host read-back — or as a
+   :class:`~repro.core.memref.DeviceRef` when the spec asked for reference
+   semantics).
+
+``InOut`` arguments are donated to XLA so the update happens in place,
+matching OpenCL's read-write buffer semantics; the incoming ``DeviceRef``
+(if any) is invalidated, making buffer ownership transfer explicit.
+"""
+from __future__ import annotations
+
+import inspect
+import warnings
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .actor import Actor
+from .errors import SignatureMismatch
+from .manager import Device, Program
+from .memref import DeviceRef, as_device_array
+from .signature import In, InOut, KernelSignature, Local, NDRange, Out
+
+__all__ = ["KernelActor"]
+
+
+class KernelActor(Actor):
+    """The paper's ``actor_facade`` adapted to JAX (DESIGN.md §2)."""
+
+    def __init__(self, fn: Callable, name: str, nd_range: Optional[NDRange],
+                 specs: Sequence, device: Device,
+                 program: Optional[Program] = None,
+                 preprocess: Optional[Callable] = None,
+                 postprocess: Optional[Callable] = None,
+                 donate: bool = True):
+        super().__init__()
+        self.fn = fn
+        self.kernel_name = name
+        self.nd_range = nd_range
+        self.signature = KernelSignature(*specs)
+        self.device = device
+        self.program = program
+        self.preprocess = preprocess
+        self.postprocess = postprocess
+        self.donate = donate
+        self._jitted = None
+        # Kernels may want the index space / local sizes / resolved output
+        # shapes; detect which keywords the callable accepts once.
+        try:
+            params = inspect.signature(fn).parameters
+            self._fn_kwargs = {k for k in ("nd_range", "out_shapes", "local_shapes")
+                               if k in params}
+        except (TypeError, ValueError):  # pragma: no cover - builtins
+            self._fn_kwargs = set()
+
+    # -- compilation ------------------------------------------------------
+    def _build(self):
+        sig = self.signature
+        fn = self.fn
+        static_kwargs = {}
+        if "nd_range" in self._fn_kwargs:
+            static_kwargs["nd_range"] = self.nd_range
+        if "local_shapes" in self._fn_kwargs:
+            static_kwargs["local_shapes"] = tuple(
+                s.resolved_shape() for s in sig.local_specs)
+
+        def wrapped(*inputs):
+            out = fn(*inputs, **static_kwargs)
+            return out if isinstance(out, tuple) else (out,)
+
+        donate = sig.donate_argnums if self.donate else ()
+        jitted = jax.jit(wrapped, donate_argnums=donate)
+
+        def build():
+            return jitted
+        key = ("jit", self.kernel_name, bool(donate))
+        if self.program is not None:
+            return self.program.compiled(key, build)
+        return jitted
+
+    def on_start(self):
+        if self._jitted is None:
+            self._jitted = self._build()
+
+    # -- behavior ------------------------------------------------------
+    def receive(self, *payload: Any) -> Any:
+        if self.preprocess is not None:
+            converted = self.preprocess(*payload)
+            if converted is None:  # pattern did not match → drop (paper §2.1)
+                return None
+            payload = converted if isinstance(converted, tuple) else (converted,)
+
+        sig = self.signature
+        inputs = sig.match_inputs(payload)
+        dev = self.device.jax_device
+        arrays = []
+        consumed_refs = []
+        for spec, value in zip(sig.input_specs, inputs):
+            if isinstance(value, DeviceRef):
+                arr = value.array
+                if spec.direction == "in_out":
+                    consumed_refs.append(value)
+            else:
+                # Untyped Python scalars/lists adopt the spec dtype; arrays
+                # keep theirs so mismatches are caught (pattern matching).
+                cast = None if hasattr(value, "dtype") else spec.np_dtype
+                arr = as_device_array(value, device=dev, dtype=cast)
+            if not spec.matches(arr.dtype):
+                raise SignatureMismatch(
+                    f"kernel {self.kernel_name!r}: argument dtype {arr.dtype} "
+                    f"does not match spec {spec.np_dtype}")
+            arrays.append(arr)
+
+        if self._jitted is None:
+            self.on_start()
+        self.device._dispatch_started()
+        try:
+            with warnings.catch_warnings():
+                # CPU backends may decline donation; that is fine.
+                warnings.simplefilter("ignore")
+                outputs = self._jitted(*arrays)
+        finally:
+            self.device._dispatch_finished()
+
+        # donated buffers: ownership moved into the kernel
+        for ref in consumed_refs:
+            ref.release()
+
+        if len(outputs) != len(sig.output_specs):
+            raise SignatureMismatch(
+                f"kernel {self.kernel_name!r} returned {len(outputs)} outputs, "
+                f"signature declares {len(sig.output_specs)}")
+        response = []
+        for spec, arr in zip(sig.output_specs, outputs):
+            if not spec.matches(arr.dtype):
+                raise SignatureMismatch(
+                    f"kernel {self.kernel_name!r}: output dtype {arr.dtype} "
+                    f"does not match spec {spec.np_dtype}")
+            if spec.as_ref:
+                response.append(DeviceRef(arr))      # stays device-resident
+            else:
+                response.append(np.asarray(jax.device_get(arr)))  # read-back
+        result = tuple(response)
+        if self.postprocess is not None:
+            result = self.postprocess(*result)
+            if result is not None and not isinstance(result, tuple):
+                result = (result,)
+        if result is None:
+            return None
+        return result[0] if len(result) == 1 else result
+
+    def on_exit(self, reason):
+        self._jitted = None

@@ -1,0 +1,158 @@
+"""Device discovery and program bookkeeping (paper Fig. 2: manager /
+platform / device / program).
+
+* ``Platform`` wraps a JAX backend (the analogue of an OpenCL platform —
+  an entry point provided by a driver).
+* ``Device`` wraps a ``jax.Device`` and tracks an outstanding-dispatch
+  counter, the analogue of the per-device command queue.
+* ``Program`` maps kernel names to compiled callables. OpenCL compiles C
+  source at runtime; the JAX analogue is trace-and-compile at first use,
+  with the lowered/compiled executable cached per (name, shapes, device).
+* ``DeviceManager`` is the ``actor_system`` module that "performs platform
+  discovery lazily on first access and offers an interface to spawn OpenCL
+  actors" (paper §3.2).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+
+from .signature import NDRange
+
+__all__ = ["Platform", "Device", "Program", "DeviceManager"]
+
+
+class Device:
+    """An accelerator device with a dispatch (command-queue) counter."""
+
+    def __init__(self, jax_device: jax.Device, platform: "Platform"):
+        self.jax_device = jax_device
+        self.platform = platform
+        self._inflight = 0
+        self._lock = threading.Lock()
+
+    @property
+    def name(self) -> str:
+        return f"{self.jax_device.platform}:{self.jax_device.id}"
+
+    @property
+    def device_kind(self) -> str:
+        return self.jax_device.device_kind
+
+    def queue_depth(self) -> int:
+        return self._inflight
+
+    def _dispatch_started(self):
+        with self._lock:
+            self._inflight += 1
+
+    def _dispatch_finished(self):
+        with self._lock:
+            self._inflight -= 1
+
+    def __repr__(self):
+        return f"Device({self.name}, inflight={self._inflight})"
+
+
+class Platform:
+    def __init__(self, backend: str, devices: Sequence[jax.Device]):
+        self.name = backend
+        self.devices = [Device(d, self) for d in devices]
+
+    def __repr__(self):
+        return f"Platform({self.name}, {len(self.devices)} devices)"
+
+
+class Program:
+    """Named kernels + per-shape compiled-executable cache.
+
+    ``kernels`` maps a kernel name to a traceable callable. ``retrieve``
+    mirrors ``clCreateKernel``-by-name; ``compiled`` caches executables the
+    way OpenCL caches ``cl_program`` binaries per device.
+    """
+
+    def __init__(self, kernels: Dict[str, Callable], device: Optional[Device] = None,
+                 options: Optional[Dict[str, Any]] = None):
+        self.kernels = dict(kernels)
+        self.device = device
+        self.options = dict(options or {})
+        self._cache: Dict[Any, Any] = {}
+        self._lock = threading.Lock()
+
+    def retrieve(self, name: str) -> Callable:
+        try:
+            return self.kernels[name]
+        except KeyError:
+            raise KeyError(f"program has no kernel named {name!r}; "
+                           f"available: {sorted(self.kernels)}") from None
+
+    def compiled(self, key: Any, build: Callable[[], Any]) -> Any:
+        with self._lock:
+            if key not in self._cache:
+                self._cache[key] = build()
+            return self._cache[key]
+
+
+class DeviceManager:
+    """Lazily discovers platforms and spawns kernel actors (paper §3.2)."""
+
+    def __init__(self, system):
+        self.system = system
+        self._platforms: Optional[list[Platform]] = None
+        self._lock = threading.Lock()
+
+    # -- discovery ------------------------------------------------------
+    @property
+    def platforms(self) -> list[Platform]:
+        with self._lock:
+            if self._platforms is None:
+                self._platforms = self._discover()
+            return self._platforms
+
+    def _discover(self) -> list[Platform]:
+        by_backend: Dict[str, list] = {}
+        for d in jax.devices():
+            by_backend.setdefault(d.platform, []).append(d)
+        return [Platform(k, v) for k, v in sorted(by_backend.items())]
+
+    def devices(self) -> list[Device]:
+        return [d for p in self.platforms for d in p.devices]
+
+    def find_device(self, *, platform: Optional[str] = None, index: int = 0) -> Device:
+        """Default binding is the first discovered device (paper §3.6)."""
+        devs = self.devices()
+        if platform is not None:
+            devs = [d for d in devs if d.jax_device.platform == platform]
+        if not devs:
+            raise LookupError(f"no device for platform={platform!r}")
+        return devs[index]
+
+    # -- program / actor creation -------------------------------------------
+    def create_program(self, kernels: Dict[str, Callable],
+                       device: Optional[Device] = None, **options) -> Program:
+        return Program(kernels, device or self.find_device(), options)
+
+    def spawn(self, source, name: Optional[str] = None,
+              nd_range: Optional[NDRange] = None, *specs, **kwargs):
+        """Spawn an OpenCL actor (paper Listing 2/3/5).
+
+        ``source`` is either a traceable callable (the JAX stand-in for
+        OpenCL C source) or a :class:`Program`; ``name`` selects the kernel
+        within a program. Optional ``preprocess``/``postprocess`` keyword
+        arguments mirror the paper's conversion functions.
+        """
+        from .facade import KernelActor  # local import: avoid cycle
+        if isinstance(source, Program):
+            program, fn = source, source.retrieve(name)
+            device = kwargs.pop("device", None) or program.device or self.find_device()
+        else:
+            if not callable(source):
+                raise TypeError("source must be a callable or Program")
+            program, fn = None, source
+            device = kwargs.pop("device", None) or self.find_device()
+        actor = KernelActor(fn=fn, name=name or getattr(fn, "__name__", "kernel"),
+                            nd_range=nd_range, specs=specs, device=device,
+                            program=program, **kwargs)
+        return self.system.spawn(actor)

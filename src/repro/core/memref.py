@@ -1,0 +1,135 @@
+"""Device-resident memory references — the paper's ``mem_ref<T>`` (§3.5).
+
+A :class:`DeviceRef` represents data living on an accelerator device. It is
+what OpenCL actors forward between pipeline stages so that intermediate
+results never round-trip through host memory.
+
+JAX adaptation (DESIGN.md §2): a dispatched computation returns a
+``jax.Array`` immediately — the array *is* the completion event. Wrapping
+it in a ``DeviceRef`` and forwarding it to the next stage therefore
+reproduces the paper's OpenCL-event chaining (Listing 4) with zero extra
+machinery: stage *n+1* may enqueue against the ref before stage *n* has
+finished executing on the device; XLA's runtime resolves the dependency.
+
+Like the paper's reference type, a ``DeviceRef`` carries element type,
+length, and access rights, and it is bound to the local process — we take
+the paper's option (a) for distribution: serialization raises, making
+expensive cross-node copies explicit (``to_value()``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["DeviceRef", "as_device_array", "live_ref_count"]
+
+_live = 0
+_live_lock = threading.Lock()
+
+
+def live_ref_count() -> int:
+    """Number of un-released DeviceRefs (used by tests/leak checks)."""
+    return _live
+
+
+class DeviceRef:
+    """A typed handle to device-resident data (``mem_ref<T>``).
+
+    Attributes mirror the paper's description: "a reference type includes
+    type information about the data it references in addition to the amount
+    of bytes it refers to and memory access rights."
+    """
+
+    __slots__ = ("_array", "dtype", "shape", "access", "_released", "__weakref__")
+
+    def __init__(self, array: jax.Array, access: str = "rw"):
+        if access not in ("r", "w", "rw"):
+            raise ValueError("access must be 'r', 'w' or 'rw'")
+        self._array = array
+        self.dtype = array.dtype
+        self.shape = tuple(array.shape)
+        self.access = access
+        self._released = False
+        global _live
+        with _live_lock:
+            _live += 1
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * np.prod(self.shape, dtype=np.int64))
+
+    @property
+    def array(self) -> jax.Array:
+        """The underlying (possibly still-executing) device array."""
+        if self._released:
+            raise RuntimeError("DeviceRef used after release")
+        return self._array
+
+    @property
+    def sharding(self):
+        return self._array.sharding
+
+    def is_ready(self) -> bool:
+        """True once the producing computation has completed on device."""
+        try:
+            return bool(self._array.is_ready())
+        except AttributeError:  # pragma: no cover - older jax
+            return True
+
+    # -- data movement ------------------------------------------------------
+    def to_value(self) -> np.ndarray:
+        """Explicit device→host copy (the paper's read-back at pipeline end)."""
+        return np.asarray(jax.device_get(self.array))
+
+    def block_until_ready(self) -> "DeviceRef":
+        self.array.block_until_ready()
+        return self
+
+    def release(self) -> None:
+        """Drop the device buffer (paper: "dropping a reference argument
+        simply releases its memory on the device")."""
+        if not self._released:
+            self._released = True
+            self._array = None
+            global _live
+            with _live_lock:
+                _live -= 1
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        try:
+            self.release()
+        except Exception:
+            pass
+
+    # -- distribution policy -------------------------------------------------
+    def __reduce__(self):
+        # Paper §3.5 option (a): prohibit serialization of reference types so
+        # sending one over the network raises instead of silently copying.
+        raise TypeError(
+            "DeviceRef is bound to local device memory and cannot be "
+            "serialized; call .to_value() for an explicit host copy"
+        )
+
+    def __repr__(self):
+        state = "released" if self._released else ("ready" if self.is_ready() else "pending")
+        return f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}[{self.access}, {state}]"
+
+
+def as_device_array(value, device=None, dtype=None) -> jax.Array:
+    """Normalize message payloads (host arrays, scalars, or DeviceRefs) to a
+    device array, transferring host data if needed (paper: the first actor in
+    a chain transfers input data to the device)."""
+    if isinstance(value, DeviceRef):
+        arr = value.array
+    else:
+        arr = value
+    if not isinstance(arr, jax.Array):
+        arr = np.asarray(arr, dtype=dtype)
+        arr = jax.device_put(arr, device)
+    elif device is not None and getattr(arr, "sharding", None) is not None:
+        arr = jax.device_put(arr, device)
+    return arr

@@ -1,0 +1,189 @@
+"""Heterogeneous scheduling across device pools (paper §5.4, §3.6).
+
+The paper evaluates *fractional offload*: a workload is split between the
+CPU and one or more OpenCL devices, the fraction swept from 0 % to 100 %.
+This module generalizes that into a small production scheduler:
+
+* :func:`split_offload`      — the paper's experiment: one split by fixed
+                               fractions across heterogeneous workers.
+* :class:`ChunkScheduler`    — chunked pull-based dispatch (more chunks
+                               than workers), which gives
+                               - load balancing across devices of unequal
+                                 speed (paper §3.6 "scheduling kernels
+                                 across multiple devices"),
+                               - **straggler mitigation**: once the queue
+                                 drains, outstanding chunks are re-issued
+                                 speculatively to idle workers and the
+                                 first completion wins,
+                               - **elastic scaling**: workers may be added
+                                 or removed between (or during) runs; a
+                                 worker that dies (actor terminates) simply
+                                 stops winning chunks and its outstanding
+                                 chunks are re-issued.
+
+At pod scale the same logic drives the elastic batch splitter in
+``repro.dist.fault``: the "workers" are mesh-slice stage actors.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Sequence
+
+from .actor import ActorRef
+
+__all__ = ["split_offload", "ChunkScheduler", "WorkItem"]
+
+
+def split_offload(workers: Sequence[ActorRef],
+                  fractions: Sequence[float],
+                  make_payload: Callable[[int, int], tuple],
+                  sizes_of: Callable[[Sequence[float]], Sequence[int]],
+                  combine: Callable[[List[Any]], Any]) -> Any:
+    """One fractional split across heterogeneous workers (paper Fig. 7/8).
+
+    ``sizes_of(fractions)`` returns per-worker item counts; ``make_payload
+    (start, size)`` builds each worker's request; ``combine`` reassembles
+    ordered results. Zero-sized fractions skip their worker entirely (the
+    0 %/100 % endpoints of the paper's sweep).
+    """
+    if len(workers) != len(fractions):
+        raise ValueError("one fraction per worker")
+    sizes = list(sizes_of(fractions))
+    futures: list[Optional[Future]] = []
+    start = 0
+    for w, sz in zip(workers, sizes):
+        if sz == 0:
+            futures.append(None)
+        else:
+            futures.append(w.request(*make_payload(start, sz)))
+        start += sz
+    results = [None if f is None else f.result() for f in futures]
+    return combine([r for r in results if r is not None])
+
+
+class WorkItem:
+    __slots__ = ("index", "payload", "result", "done", "attempts", "issued_at")
+
+    def __init__(self, index: int, payload: tuple):
+        self.index = index
+        self.payload = payload
+        self.result: Any = None
+        self.done = False
+        self.attempts = 0
+        self.issued_at: float = 0.0
+
+
+class ChunkScheduler:
+    """Pull-based chunk dispatch with speculative re-issue of stragglers."""
+
+    def __init__(self, workers: Sequence[ActorRef], *,
+                 straggler_factor: float = 3.0, max_attempts: int = 3):
+        self._workers: list[ActorRef] = list(workers)
+        self.straggler_factor = straggler_factor
+        self.max_attempts = max_attempts
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.stats = {"dispatched": 0, "speculative": 0, "failed": 0}
+
+    # -- elastic worker pool -------------------------------------------------
+    def add_worker(self, w: ActorRef) -> None:
+        with self._lock:
+            self._workers.append(w)
+
+    def remove_worker(self, w: ActorRef) -> None:
+        with self._lock:
+            self._workers = [x for x in self._workers if x.actor_id != w.actor_id]
+
+    @property
+    def workers(self) -> list[ActorRef]:
+        return list(self._workers)
+
+    # -- execution ------------------------------------------------------
+    def run(self, payloads: Sequence[tuple],
+            timeout: Optional[float] = 300.0) -> list:
+        """Execute every payload on some worker; returns ordered results."""
+        items = [WorkItem(i, p) for i, p in enumerate(payloads)]
+        pending = list(items)            # not yet issued (FIFO)
+        outstanding: dict[int, WorkItem] = {}
+        remaining = len(items)
+        durations: list[float] = []
+        idle: list[ActorRef] = [w for w in self._workers if w.is_alive()]
+        if not idle:
+            raise RuntimeError("no live workers")
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def issue(worker: ActorRef, item: WorkItem, speculative: bool) -> None:
+            item.attempts += 1
+            item.issued_at = time.monotonic()
+            self.stats["dispatched"] += 1
+            if speculative:
+                self.stats["speculative"] += 1
+            fut = worker.request(*item.payload)
+            fut.add_done_callback(lambda f: on_done(worker, item, f))
+
+        def on_done(worker: ActorRef, item: WorkItem, fut: Future) -> None:
+            nonlocal remaining
+            with self._cv:
+                failed = fut.exception() is not None
+                if failed:
+                    self.stats["failed"] += 1
+                    if worker.is_alive():
+                        idle.append(worker)
+                    if not item.done and item.index not in (
+                            i for i in outstanding) and item.attempts >= self.max_attempts:
+                        # permanently failed item: surface on wait
+                        item.result = fut.exception()
+                    elif not item.done:
+                        pending.insert(0, item)  # retry soon
+                else:
+                    durations.append(time.monotonic() - item.issued_at)
+                    if not item.done:  # first completion wins
+                        item.done = True
+                        item.result = fut.result()
+                        outstanding.pop(item.index, None)
+                        remaining -= 1
+                    idle.append(worker)
+                self._cv.notify_all()
+
+        with self._cv:
+            while remaining > 0:
+                # issue fresh work
+                while pending and idle:
+                    w = idle.pop()
+                    if not w.is_alive():
+                        continue
+                    item = pending.pop(0)
+                    if item.done:
+                        continue
+                    outstanding[item.index] = item
+                    issue(w, item, speculative=False)
+                # speculative re-issue for stragglers
+                if not pending and idle and outstanding and durations:
+                    med = sorted(durations)[len(durations) // 2]
+                    now = time.monotonic()
+                    for item in sorted(outstanding.values(), key=lambda x: x.issued_at):
+                        if not idle:
+                            break
+                        if (now - item.issued_at) > self.straggler_factor * max(med, 1e-4) \
+                                and item.attempts < self.max_attempts:
+                            w = idle.pop()
+                            if w.is_alive():
+                                issue(w, item, speculative=True)
+                if remaining == 0:
+                    break
+                wait_for = 0.05
+                if deadline is not None:
+                    wait_for = min(wait_for, deadline - time.monotonic())
+                    if wait_for <= 0:
+                        raise TimeoutError(
+                            f"{remaining} chunks unfinished after timeout")
+                self._cv.wait(timeout=wait_for)
+
+        results = []
+        for item in items:
+            if isinstance(item.result, BaseException):
+                raise item.result
+            results.append(item.result)
+        return results

@@ -1,0 +1,158 @@
+"""Unit tests for the actor runtime (paper §2.1 semantics)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (Actor, ActorFailed, ActorSystem, DownMessage,
+                        ExitMessage)
+
+
+@pytest.fixture()
+def system():
+    s = ActorSystem(max_workers=4)
+    yield s
+    s.shutdown()
+
+
+def test_spawn_function_actor_and_request(system):
+    ref = system.spawn(lambda x, y: x + y)
+    assert ref.ask(2, 3) == 5
+
+
+def test_messages_processed_in_order(system):
+    seen = []
+    done = threading.Event()
+
+    def behave(i):
+        seen.append(i)
+        if i == 99:
+            done.set()
+
+    ref = system.spawn(behave)
+    for i in range(100):
+        ref.send(i)
+    assert done.wait(10)
+    assert seen == list(range(100))
+
+
+def test_actor_state_isolated_sequential(system):
+    """Actors are isolated entities; a single actor never runs concurrently."""
+
+    class Counter(Actor):
+        def __init__(self):
+            super().__init__()
+            self.n = 0
+            self.concurrent = 0
+            self.max_concurrent = 0
+
+        def receive(self, _):
+            self.concurrent += 1
+            self.max_concurrent = max(self.max_concurrent, self.concurrent)
+            time.sleep(0.001)
+            self.n += 1
+            self.concurrent -= 1
+            return self.n
+
+    c = Counter()
+    ref = system.spawn(c)
+    futs = [ref.request("tick") for _ in range(50)]
+    results = [f.result(10) for f in futs]
+    assert results == list(range(1, 51))
+    assert c.max_concurrent == 1
+
+
+def test_failure_sets_exception_and_kills_actor(system):
+    def bad(x):
+        raise ValueError("boom")
+
+    ref = system.spawn(bad)
+    with pytest.raises(ValueError):
+        ref.ask(1)
+    assert not ref.is_alive()
+    with pytest.raises(ActorFailed):
+        ref.ask(2)
+
+
+def test_monitor_receives_down_message(system):
+    inbox = []
+    got = threading.Event()
+
+    def watcher(msg):
+        inbox.append(msg)
+        got.set()
+
+    w = system.spawn(watcher)
+    target = system.spawn(lambda: 1 / 0)
+    system.monitor(w, target)
+    target.send()
+    assert got.wait(10)
+    assert isinstance(inbox[0], DownMessage)
+    assert inbox[0].actor_id == target.actor_id
+    assert isinstance(inbox[0].reason, ZeroDivisionError)
+
+
+def test_monitor_on_dead_actor_fires_immediately(system):
+    inbox = []
+    got = threading.Event()
+
+    def watcher(msg):
+        inbox.append(msg)
+        got.set()
+
+    w = system.spawn(watcher)
+    target = system.spawn(lambda x: x)
+    target.exit(None)
+    system.monitor(w, target)
+    assert got.wait(10)
+    assert isinstance(inbox[0], DownMessage)
+
+
+def test_link_propagates_exit(system):
+    class Trapper(Actor):
+        def __init__(self):
+            super().__init__()
+            self.trap_exit = True
+            self.exits = []
+            self.got = threading.Event()
+
+        def receive(self, msg):
+            if isinstance(msg, ExitMessage):
+                self.exits.append(msg)
+                self.got.set()
+
+    trapper = Trapper()
+    t = system.spawn(trapper)
+    victim = system.spawn(lambda: 1 / 0)
+    system.link(t, victim)
+    victim.send()
+    assert trapper.got.wait(10)
+    assert trapper.exits[0].actor_id == victim.actor_id
+
+
+def test_link_kills_non_trapping_actor(system):
+    other = system.spawn(lambda x: x)
+    victim = system.spawn(lambda: 1 / 0)
+    system.link(other, victim)
+    victim.send()
+    deadline = time.monotonic() + 10
+    while other.is_alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not other.is_alive()
+
+
+def test_promise_delegation(system):
+    """A behavior returning a Future delegates the response (paper §3.5)."""
+    inner = system.spawn(lambda x: x * 10)
+
+    def delegating(x):
+        return inner.request(x + 1)
+
+    outer = system.spawn(delegating)
+    assert outer.ask(4) == 50
+
+
+def test_shutdown_terminates_all(system):
+    refs = [system.spawn(lambda x: x) for _ in range(10)]
+    system.shutdown()
+    assert all(not r.is_alive() for r in refs)

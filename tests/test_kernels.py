@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret=True on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(1234)
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 256), (384, 128, 384)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = RNG.standard_normal((m, k), np.float32).astype(dtype)
+    b = RNG.standard_normal((k, n), np.float32).astype(dtype)
+    got = ops.matmul(a, b, impl="pallas")
+    want = ref.matmul(jnp.asarray(a), jnp.asarray(b))
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_matmul_nondivisible_falls_back():
+    a = RNG.standard_normal((100, 100), np.float32)
+    b = RNG.standard_normal((100, 100), np.float32)
+    got = ops.matmul(jnp.asarray(a), jnp.asarray(b), impl="auto")
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("h,w,it", [(8, 128, 16), (16, 256, 64), (24, 128, 100)])
+def test_mandelbrot_sweep(h, w, it):
+    kw = dict(height=h, width=w, max_iter=it, re_min=-0.5, re_max=0.1,
+              im_min=-0.7375, im_max=-0.1375)
+    np.testing.assert_array_equal(np.asarray(ops.mandelbrot(impl="pallas", **kw)),
+                                  np.asarray(ops.mandelbrot(impl="ref", **kw)))
+
+
+def test_mandelbrot_row_offset_consistency():
+    """Fractional offload slices must tile to the full image (paper §5.4)."""
+    kw = dict(width=128, max_iter=32, re_min=-2.0, re_max=1.0,
+              im_min=-1.5, im_max=1.5)
+    full = np.asarray(ops.mandelbrot(height=32, total_height=32, impl="pallas", **kw))
+    top = np.asarray(ops.mandelbrot(height=16, row_offset=0, total_height=32,
+                                    impl="pallas", **kw))
+    bottom = np.asarray(ops.mandelbrot(height=16, row_offset=16, total_height=32,
+                                       impl="pallas", **kw))
+    np.testing.assert_array_equal(np.vstack([top, bottom]), full)
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bs", [(256, 256), (1024, 256), (2048, 512)])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_stream_compact_sweep(n, bs, density):
+    mask = RNG.random(n) < density
+    x = (RNG.integers(1, 2**32, n, dtype=np.uint64).astype(np.uint32)) * mask
+    got, cnt = ops.stream_compact(jnp.asarray(x), bs=bs, impl="pallas")
+    want, wcnt = ref.stream_compact(jnp.asarray(x))
+    assert int(cnt) == int(wcnt) == int(mask.sum())
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stream_compact_order_preserved():
+    x = np.array([5, 0, 7, 0, 0, 9, 1, 0] * 32, np.uint32)
+    got, cnt = ops.stream_compact(jnp.asarray(x), bs=256, impl="pallas")
+    survivors = x[x != 0]
+    np.testing.assert_array_equal(np.asarray(got)[:int(cnt)], survivors)
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_radix_sort_sweep(n, bits):
+    keys = RNG.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    vals = np.arange(n, dtype=np.int32)
+    kp, vp = ops.radix_sort(jnp.asarray(keys), jnp.asarray(vals),
+                            bits_per_pass=bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(kp), np.sort(keys))
+    # payload permuted consistently
+    np.testing.assert_array_equal(keys[np.asarray(vp)], np.asarray(kp))
+
+
+def test_radix_sort_stability():
+    """Equal keys keep input order (required by the WAH pipeline)."""
+    keys = np.array([3, 1, 3, 1, 2, 3, 1, 2] * 32, np.uint32)
+    vals = np.arange(keys.size, dtype=np.int32)
+    _, vp = ops.radix_sort(jnp.asarray(keys), jnp.asarray(vals), impl="pallas")
+    vp = np.asarray(vp)
+    for key in (1, 2, 3):
+        positions = vp[np.sort(np.flatnonzero(keys[vp] == key))]
+        assert (np.diff(positions) > 0).all()
+
+
+def test_radix_sort_16bit_oracle_path():
+    keys = RNG.integers(0, 2**32, 512, dtype=np.uint64).astype(np.uint32)
+    kp = ops.radix_sort(jnp.asarray(keys), bits_per_pass=16)
+    np.testing.assert_array_equal(np.asarray(kp), np.sort(keys))
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bs", [(512, 512), (2048, 512), (1024, 256)])
+def test_wah_interleave_sweep(n, bs):
+    f = RNG.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    l = RNG.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    got = ops.wah_interleave(jnp.asarray(f), jnp.asarray(l), bs=bs, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.wah_interleave(jnp.asarray(f),
+                                                                jnp.asarray(l))))
+
+
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d", [
+    (1, 2, 2, 128, 128, 64),     # MHA square
+    (2, 4, 2, 128, 256, 64),     # GQA, kv longer (decode-ish)
+    (1, 8, 1, 64, 128, 128),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, hkv, sq, skv, d, causal):
+    q = RNG.standard_normal((b, h, sq, d), np.float32)
+    k = RNG.standard_normal((b, hkv, skv, d), np.float32)
+    v = RNG.standard_normal((b, hkv, skv, d), np.float32)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=causal, impl="pallas", bq=64, bk=64)
+    want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_attention_local_window(window):
+    q = RNG.standard_normal((1, 2, 128, 64), np.float32)
+    k = RNG.standard_normal((1, 2, 256, 64), np.float32)
+    v = RNG.standard_normal((1, 2, 256, 64), np.float32)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=True, window=window, impl="pallas",
+                              bq=64, bk=64)
+    want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = RNG.standard_normal((1, 2, 128, 64), np.float32).astype(jnp.bfloat16)
+    k = RNG.standard_normal((1, 2, 128, 64), np.float32).astype(jnp.bfloat16)
+    v = RNG.standard_normal((1, 2, 128, 64), np.float32).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, impl="pallas", bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,95 @@
+"""Hypothesis property tests over system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.signature import NDRange, _proportional_split
+from repro.kernels import ops, ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# -- scheduler / NDRange invariants ------------------------------------------
+@given(total=st.integers(1, 10_000),
+       fracs=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=8))
+@settings(**_SETTINGS)
+def test_proportional_split_partitions_total(total, fracs):
+    s = sum(fracs)
+    if s == 0:
+        fracs = [1.0]
+        s = 1.0
+    fracs = [f / s for f in fracs]
+    sizes = _proportional_split(total, fracs)
+    assert sum(sizes) == total
+    assert all(sz >= 0 for sz in sizes)
+
+
+@given(n=st.integers(2, 512), cut=st.floats(0.01, 0.99))
+@settings(**_SETTINGS)
+def test_ndrange_split_covers_range(n, cut):
+    r = NDRange((n,))
+    a, b = r.split([cut, 1.0 - cut])
+    parts = [p for p in (a, b) if p is not None]
+    covered = sorted((p.offsets[0], p.offsets[0] + p.global_dims[0]) for p in parts)
+    assert covered[0][0] == 0
+    assert covered[-1][1] == n
+    for (s0, e0), (s1, _) in zip(covered, covered[1:]):
+        assert e0 == s1  # contiguous, no overlap
+
+
+# -- compaction invariants ----------------------------------------------------
+@given(data=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=2048))
+@settings(**_SETTINGS)
+def test_stream_compact_matches_numpy_filter(data):
+    x = np.array(data, np.uint32)
+    pad = (-len(x)) % 256
+    x = np.pad(x, (0, pad))
+    got, cnt = ops.stream_compact(jnp.asarray(x), bs=256, impl="pallas")
+    survivors = x[x != 0]
+    assert int(cnt) == survivors.size
+    np.testing.assert_array_equal(np.asarray(got)[:survivors.size], survivors)
+    # tail is zero-filled
+    assert (np.asarray(got)[survivors.size:] == 0).all()
+
+
+# -- sort invariants ----------------------------------------------------------
+@given(data=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=1024))
+@settings(**_SETTINGS)
+def test_radix_sort_is_permutation_and_sorted(data):
+    x = np.array(data, np.uint32)
+    pad = (-len(x)) % 256
+    # pad with max so padding sorts to the end deterministically
+    x = np.pad(x, (0, pad), constant_values=np.uint32(2**32 - 1))
+    got = np.asarray(ops.radix_sort(jnp.asarray(x), impl="pallas"))
+    assert (np.diff(got.astype(np.uint64)) >= 0).all()
+    np.testing.assert_array_equal(np.sort(got), np.sort(x))
+
+
+# -- attention invariants -------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_attention_rows_are_convex_combinations(seed):
+    """Each output row lies in the convex hull of V rows → bounded by V."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((1, 2, 64, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 2, 64, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 2, 64, 64)).astype(np.float32)
+    out = np.asarray(ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                         jnp.asarray(v), causal=True,
+                                         impl="pallas", bq=64, bk=64))
+    assert out.min() >= v.min() - 1e-4
+    assert out.max() <= v.max() + 1e-4
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_full_window_equals_plain_causal(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((1, 1, 128, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 1, 128, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 1, 128, 64)).astype(np.float32)
+    a = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, window=128)
+    b = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
