@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ActorSystem, In, NDRange, Out, dim_vec, fuse
+from repro.core import ActorSystem, In, NDRange, Out, Pipeline, dim_vec, kernel
 from repro.kernels import ops
 
 from .common import emit, timeit
@@ -18,13 +18,17 @@ _N = 256
 _ITERS = 100
 
 
+@kernel(In(jnp.float32), Out(jnp.float32, as_ref=True),
+        nd_range=NDRange(dim_vec(_N, _N)), name="m_iter")
+def _m_iter(x):
+    return ops.ref.matmul(x, x)
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     a = rng.random((_N, _N), np.float32) / _N
 
     with ActorSystem(max_workers=4) as system:
-        mngr = system.opencl_manager()
-
         mm = jax.jit(lambda x: ops.ref.matmul(x, x))
 
         def native_loop():
@@ -33,9 +37,7 @@ def run() -> None:
                 x = mm(x)
             x.block_until_ready()
 
-        worker = mngr.spawn(lambda x: ops.ref.matmul(x, x), "m_iter",
-                            NDRange(dim_vec(_N, _N)),
-                            In(jnp.float32), Out(jnp.float32, as_ref=True))
+        worker = system.spawn(_m_iter)
 
         def actor_loop():
             ref = worker.ask(a)
@@ -44,8 +46,9 @@ def run() -> None:
             ref.to_value()
 
         # fused: 10 stages traced into one program, iterated 10x
-        stages = [worker] * 10
-        fused = fuse(system, *stages, name="fused10")
+        # (Pipeline auto-fuses: all stages are one traceable kernel decl)
+        fused = Pipeline(system, mode="auto", name="fused10").stages(
+            [_m_iter] * 10).build()
 
         def fused_loop():
             ref = fused.ask(a)

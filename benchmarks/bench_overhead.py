@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ActorSystem, In, NDRange, Out, dim_vec
+from repro.core import ActorSystem, In, NDRange, Out, dim_vec, kernel
 from repro.kernels import ops
 
 from .common import emit, timeit
@@ -15,7 +15,6 @@ from .common import emit, timeit
 
 def run() -> None:
     with ActorSystem(max_workers=4) as system:
-        mngr = system.opencl_manager()
         for n in (256, 512, 1024):
             a = np.random.default_rng(0).random((n, n), np.float32)
             b = np.random.default_rng(1).random((n, n), np.float32)
@@ -26,10 +25,11 @@ def run() -> None:
             def native_call():
                 native(aj, bj).block_until_ready()
 
-            worker = mngr.spawn(ops.ref.matmul, f"m_mult_{n}",
-                                NDRange(dim_vec(n, n)),
-                                In(jnp.float32), In(jnp.float32),
-                                Out(jnp.float32, shape=(n, n)))
+            m_mult = kernel(In(jnp.float32), In(jnp.float32),
+                            Out(jnp.float32, shape=(n, n)),
+                            nd_range=NDRange(dim_vec(n, n)),
+                            name=f"m_mult_{n}")(ops.ref.matmul)
+            worker = system.spawn(m_mult)
 
             def actor_call():
                 worker.ask(a, b)

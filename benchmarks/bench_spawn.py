@@ -8,20 +8,23 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ActorSystem, In, NDRange, Out, dim_vec
+from repro.core import ActorSystem, In, NDRange, Out, dim_vec, kernel
 
 from .common import emit
+
+
+@kernel(In(jnp.float32), Out(jnp.float32), nd_range=NDRange(dim_vec(64)),
+        name="inc")
+def _inc(x):
+    return x + 1.0
 
 
 def _spawn_kernel_actors(n: int) -> float:
     t0 = time.perf_counter()
     with ActorSystem(max_workers=4) as system:
-        mngr = system.opencl_manager()
-        rng = NDRange(dim_vec(64))
         last = None
         for _ in range(n):
-            last = mngr.spawn(lambda x: x + 1.0, "inc", rng,
-                              In(jnp.float32), Out(jnp.float32))
+            last = system.spawn(_inc)
         last.ask(np.zeros(64, np.float32))
         return time.perf_counter() - t0
 

@@ -1,0 +1,18 @@
+"""Repo-level pytest config.
+
+Installs the vendored ``repro._compat.minihypothesis`` under the
+``hypothesis`` name when the real library is not importable, so
+``tests/test_property.py`` collects and runs in hermetic containers.
+The real package always wins when present.
+"""
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+if importlib.util.find_spec("hypothesis") is None:
+    from repro._compat import minihypothesis as _mh
+
+    sys.modules["hypothesis"] = _mh
+    sys.modules["hypothesis.strategies"] = _mh.strategies

@@ -1,8 +1,8 @@
-"""Quickstart — the paper's Listings 1+2 in this framework.
+"""Quickstart — the paper's Listings 1+2 in this framework (v2 API).
 
-An OpenCL actor multiplying two square matrices: spawn a kernel actor
-with an NDRange and an in/in/out signature, send the matrices, receive
-the product. Run:
+An OpenCL actor multiplying two square matrices: declare the kernel with
+``@kernel`` (signature + ND-range captured at definition site), spawn it
+directly from the actor system, send the matrices, receive the product:
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +10,20 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import ActorSystem, In, NDRange, Out, dim_vec
+from repro.core import ActorSystem, In, NDRange, Out, dim_vec, kernel
 from repro.kernels import ops
 
 MX_DIM = 512
+
+
+# Listing 1's kernel — the traceable callable is the "source"; ops.matmul
+# dispatches to the Pallas MXU kernel on TPU. The @kernel declaration
+# replaces the v1 positional spawn(source, name, nd_range, *specs).
+@kernel(In(jnp.float32), In(jnp.float32),
+        Out(jnp.float32, shape=(MX_DIM, MX_DIM)),
+        nd_range=NDRange(dim_vec(MX_DIM, MX_DIM)), name="m_mult")
+def m_mult(a, b):
+    return ops.matmul(a, b)
 
 
 def main() -> None:
@@ -22,13 +32,7 @@ def main() -> None:
         mngr = system.opencl_manager()
         print("platforms:", mngr.platforms)
 
-        # Listing 1's kernel — here the traceable callable is the "source";
-        # ops.matmul dispatches to the Pallas MXU kernel on TPU
-        worker = mngr.spawn(
-            ops.matmul, "m_mult",
-            NDRange(dim_vec(MX_DIM, MX_DIM)),
-            In(jnp.float32), In(jnp.float32),
-            Out(jnp.float32, shape=(MX_DIM, MX_DIM)))
+        worker = system.spawn(m_mult)
 
         rng = np.random.default_rng(0)
         m1 = rng.random((MX_DIM, MX_DIM), np.float32)

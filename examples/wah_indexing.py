@@ -41,14 +41,15 @@ def main() -> None:
         assert np.array_equal(got, want), v
     print("bitmap round-trip verified for 3 values")
 
-    # paper Listing 5: the same fuse step as a composed actor pipeline
+    # paper Listing 5: the same fuse step as a Pipeline of kernel actors
+    # (v2 API; staged mode keeps intermediates device-resident)
     with ActorSystem() as system:
         k = 1 << 12
         fills = (rng.integers(0, 2, k) * ((1 << 31) | rng.integers(1, 99, k))
                  ).astype(np.uint32)
         lits = rng.integers(1, 2 ** 31, k).astype(np.uint32)
-        fuse = wah_index_pipeline_actors(system, k)
-        out, total = fuse.ask(fills, lits)
+        pipe = wah_index_pipeline_actors(system, k, mode="staged")
+        out, total = pipe.ask(fills, lits)
         print(f"fuseFillsLiterals actor pipeline: {2 * k} slots → "
               f"{int(total)} words (zeros compacted)")
 

@@ -1,16 +1,28 @@
 """The paper's contribution: OpenCL-style kernel actors for JAX/TPU.
 
-Public API mirrors the paper's CAF additions:
+The v2 surface is declarative — signature and index space are captured at
+definition site, composition is a builder, pooling is one call:
 
-    from repro.core import ActorSystem, NDRange, dim_vec, In, Out, InOut
+    from repro.core import ActorSystem, NDRange, In, Out, dim_vec, kernel
+
+    @kernel(In(jnp.float32), In(jnp.float32),
+            Out(jnp.float32, shape=(n, n)),
+            nd_range=NDRange(dim_vec(n, n)))
+    def m_mult(a, b):
+        return a @ b
 
     sys_ = ActorSystem()
-    mngr = sys_.opencl_manager()
-    worker = mngr.spawn(m_mult, "m_mult", NDRange(dim_vec(n, n)),
-                        In(jnp.float32), In(jnp.float32), Out(jnp.float32))
+    worker = sys_.spawn(m_mult)
     result = worker.ask(a, b)
+
+    pipe = Pipeline(sys_, mode="auto").stage(m_mult).stage(scale).build()
+    pool = sys_.opencl_manager().spawn_pool(m_mult, 4, policy="least_loaded")
+
+The v1 positional surface (``mngr.spawn(fn, name, nd_range, *specs)``,
+``compose``, ``fuse``) remains available as deprecated shims.
 """
 from .actor import Actor, ActorRef, ActorSystem, Message
+from .api import ActorPool, KernelDecl, Pipeline, kernel
 from .compose import ComposedActor, compose, fuse
 from .errors import (ActorError, ActorFailed, DownMessage, ExitMessage,
                      MailboxClosed, SignatureMismatch)
@@ -22,6 +34,7 @@ from .signature import In, InOut, KernelSignature, Local, NDRange, Out, Priv, di
 
 __all__ = [
     "Actor", "ActorRef", "ActorSystem", "Message",
+    "ActorPool", "KernelDecl", "Pipeline", "kernel",
     "ComposedActor", "compose", "fuse",
     "ActorError", "ActorFailed", "DownMessage", "ExitMessage",
     "MailboxClosed", "SignatureMismatch",

@@ -83,8 +83,9 @@ class ActorRef:
     def __mul__(self, other: "ActorRef") -> "ActorRef":
         """``C = B * A`` applies ``A`` first, then ``B`` (paper §3.5,
         Listing 5: ``fuse = move_elems * count_elems * prepare``)."""
-        from .compose import compose  # local import: avoid cycle
-        return compose(self._system, other, self)
+        from .api import Pipeline  # local import: avoid cycle
+        return Pipeline(self._system, mode="staged").stages(
+            [other, self]).build()
 
     def __repr__(self):
         return f"ActorRef#{self.actor_id}"
@@ -153,8 +154,14 @@ class ActorSystem:
 
     # -- spawning ------------------------------------------------------
     def spawn(self, behavior, *args, lazy_init: bool = True, **kwargs) -> ActorRef:
-        """Create an actor from a function or an :class:`Actor` subclass
-        (paper §2.1: "actors are created using the function spawn")."""
+        """Create an actor from a function, an :class:`Actor` subclass, or
+        a ``@kernel``-decorated callable (paper §2.1: "actors are created
+        using the function spawn"; kernel declarations route through the
+        device manager so one ``spawn`` covers both worlds)."""
+        from .api import KernelDecl  # local import: avoid cycle
+        if isinstance(behavior, KernelDecl):
+            return self.opencl_manager().spawn(behavior, *args,
+                                               lazy_init=lazy_init, **kwargs)
         if isinstance(behavior, Actor):
             actor = behavior
         elif isinstance(behavior, type) and issubclass(behavior, Actor):

@@ -1,0 +1,405 @@
+"""Declarative kernel-actor API (v2) — the unified surface.
+
+The v1 surface scattered kernel declaration, composition, placement, and
+pooling across four call conventions (``DeviceManager.spawn`` with
+positional specs, ``ActorRef.__mul__``, the free function ``fuse``, and
+``ChunkScheduler``). v2 collapses them into three declarative objects:
+
+* :func:`kernel` — capture the signature and ND-range **at definition
+  site**::
+
+      @kernel(In(jnp.float32), In(jnp.float32),
+              Out(jnp.float32, shape=(n, n)),
+              nd_range=NDRange(dim_vec(n, n)))
+      def m_mult(a, b):
+          return a @ b
+
+      worker = system.spawn(m_mult)           # or mngr.spawn(m_mult)
+      result = worker.ask(a, b)
+
+* :class:`Pipeline` — one graph object subsuming staged composition
+  (paper §3.5 promise chaining) and fused composition (§3.6 single-actor
+  nesting)::
+
+      pipe = (Pipeline(system, mode="auto")    # staged | fused | auto
+              .stage(prepare).stage(count).stage(move)
+              .build())
+
+  ``auto`` fuses when every stage is traceable and placed on one device,
+  and falls back to staged composition otherwise.
+
+* :class:`ActorPool` / ``DeviceManager.spawn_pool`` — N replicas behind
+  one ref, routed round-robin or by load (outstanding requests + device
+  queue depth); pools plug directly into :class:`ChunkScheduler`.
+
+The v1 functions (``compose``, ``fuse``, positional ``spawn``) remain as
+thin shims over this module.
+"""
+from __future__ import annotations
+
+import inspect
+import itertools
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Sequence, Union
+
+from .actor import ActorRef, ActorSystem
+from .signature import KernelSignature, NDRange
+
+__all__ = ["kernel", "KernelDecl", "Pipeline", "ActorPool"]
+
+
+# ----------------------------------------------------------------------------
+# @kernel — declaration-site capture
+# ----------------------------------------------------------------------------
+class KernelDecl:
+    """A declared kernel: traceable callable + captured signature/ND-range.
+
+    Remains directly callable (the undecorated behavior), and is accepted
+    by ``ActorSystem.spawn``, ``DeviceManager.spawn``/``spawn_pool``, and
+    ``Pipeline.stage``.
+    """
+
+    def __init__(self, fn: Callable, specs: Sequence, *,
+                 nd_range: Optional[NDRange] = None,
+                 name: Optional[str] = None,
+                 preprocess: Optional[Callable] = None,
+                 postprocess: Optional[Callable] = None,
+                 donate: bool = True):
+        self.fn = fn
+        self.specs = tuple(specs)
+        self.nd_range = nd_range
+        self.name = name or getattr(fn, "__name__", "kernel")
+        self.preprocess = preprocess
+        self.postprocess = postprocess
+        self.donate = donate
+        self.signature = KernelSignature(*self.specs)
+        self.__name__ = self.name
+        self.__doc__ = getattr(fn, "__doc__", None)
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+    def with_options(self, **overrides) -> "KernelDecl":
+        """A copy with some declaration fields replaced (e.g. a resized
+        ``nd_range`` for a different problem shape)."""
+        cfg = dict(nd_range=self.nd_range, name=self.name,
+                   preprocess=self.preprocess, postprocess=self.postprocess,
+                   donate=self.donate)
+        specs = overrides.pop("specs", self.specs)
+        fn = overrides.pop("fn", self.fn)
+        unknown = set(overrides) - set(cfg)
+        if unknown:
+            raise TypeError(f"unknown kernel options: {sorted(unknown)}")
+        cfg.update(overrides)
+        return KernelDecl(fn, specs, **cfg)
+
+    def __repr__(self):
+        return (f"<kernel {self.name!r} {self.signature} "
+                f"nd_range={self.nd_range}>")
+
+
+def kernel(*specs, nd_range: Optional[NDRange] = None,
+           name: Optional[str] = None,
+           preprocess: Optional[Callable] = None,
+           postprocess: Optional[Callable] = None,
+           donate: bool = True) -> Callable[[Callable], KernelDecl]:
+    """Declare a data-parallel kernel at definition site (see module doc)."""
+
+    def decorate(fn: Callable) -> KernelDecl:
+        return KernelDecl(fn, specs, nd_range=nd_range, name=name,
+                          preprocess=preprocess, postprocess=postprocess,
+                          donate=donate)
+
+    return decorate
+
+
+# ----------------------------------------------------------------------------
+# Pipeline — unified staged/fused composition
+# ----------------------------------------------------------------------------
+class _Stage:
+    __slots__ = ("target", "device", "name")
+
+    def __init__(self, target, device, name):
+        self.target = target
+        self.device = device
+        self.name = name
+
+
+class Pipeline:
+    """Builder for multi-stage kernel graphs.
+
+    Stages may be :class:`KernelDecl`\\ s, existing actor refs (kernel or
+    plain), or bare callables (adapters between kernel stages). ``build``
+    returns an ordinary :class:`ActorRef`; messages flow through stages
+    left to right.
+    """
+
+    def __init__(self, system: ActorSystem, *, mode: str = "auto",
+                 name: str = "pipeline", device=None,
+                 nd_range: Optional[NDRange] = None):
+        if mode not in ("auto", "staged", "fused"):
+            raise ValueError(f"mode must be auto|staged|fused, got {mode!r}")
+        self.system = system
+        self.mode = mode
+        self.name = name
+        self.device = device
+        self.nd_range = nd_range
+        self._stages: List[_Stage] = []
+
+    # -- construction ------------------------------------------------------
+    def stage(self, target, *, device=None, name: Optional[str] = None
+              ) -> "Pipeline":
+        """Append a stage; returns ``self`` for chaining."""
+        if not (isinstance(target, (KernelDecl, ActorRef))
+                or callable(target)):
+            raise TypeError(f"cannot stage {target!r}")
+        self._stages.append(_Stage(target, device, name))
+        return self
+
+    def stages(self, targets: Sequence) -> "Pipeline":
+        """Append several stages at once."""
+        for t in targets:
+            self.stage(t)
+        return self
+
+    # -- introspection -----------------------------------------------------
+    def _kernel_actor_of(self, ref: ActorRef):
+        from .facade import KernelActor
+        st = self.system._actors.get(ref.actor_id)
+        actor = st.actor if st else None
+        return actor if isinstance(actor, KernelActor) else None
+
+    def _composed_stages_of(self, ref: ActorRef):
+        from .compose import ComposedActor
+        st = self.system._actors.get(ref.actor_id)
+        actor = st.actor if st else None
+        return list(actor.stages) if isinstance(actor, ComposedActor) else None
+
+    def resolved_mode(self) -> str:
+        """The mode ``build`` will use (resolves ``auto``)."""
+        if self.mode != "auto":
+            return self.mode
+        return "fused" if self._fusable() else "staged"
+
+    def _fusable(self) -> bool:
+        devices = set()
+        if self.device is not None:
+            devices.add(self.device)
+        has_kernel = False
+        for s in self._stages:
+            if s.device is not None:
+                devices.add(s.device)
+            if isinstance(s.target, KernelDecl):
+                has_kernel = True
+            elif isinstance(s.target, ActorRef):
+                ka = self._kernel_actor_of(s.target)
+                if ka is None:
+                    return False  # opaque actor: only staged works
+                has_kernel = True
+                devices.add(ka.device)
+            # bare callables are traceable adapters: fusable
+        return has_kernel and len(devices) <= 1
+
+    # -- build -------------------------------------------------------------
+    def build(self) -> ActorRef:
+        if not self._stages:
+            raise ValueError("pipeline has no stages")
+        mode = self.resolved_mode()
+        if mode == "staged":
+            return self._build_staged()
+        return self._build_fused()
+
+    def _build_staged(self) -> ActorRef:
+        from .compose import ComposedActor
+        mngr = self.system.opencl_manager()
+        flat: List[ActorRef] = []
+        for s in self._stages:
+            if isinstance(s.target, KernelDecl):
+                flat.append(mngr.spawn(s.target,
+                                       device=s.device or self.device))
+            elif isinstance(s.target, ActorRef):
+                inner = self._composed_stages_of(s.target)
+                flat.extend(inner if inner else [s.target])
+            else:
+                flat.append(self.system.spawn(s.target))
+        if len(flat) == 1:
+            return flat[0]
+        return self.system.spawn(ComposedActor(flat))
+
+    def _build_fused(self) -> ActorRef:
+        from .facade import KernelActor
+
+        fns: List[Callable] = []
+        first_sig = last_sig = None
+        first_nd = None
+        device = self.device
+        for s in self._stages:
+            target = s.target
+            if isinstance(target, ActorRef):
+                ka = self._kernel_actor_of(target)
+                if ka is None:
+                    raise TypeError(f"{target} is not a kernel actor; "
+                                    "cannot fuse")
+                fns.append(_bound_fn(ka.fn, ka.nd_range,
+                                     ka.signature.local_specs,
+                                     known_kwargs=ka._fn_kwargs))
+                sig, nd, dev = ka.signature, ka.nd_range, ka.device
+            elif isinstance(target, KernelDecl):
+                fns.append(_bound_fn(target.fn, target.nd_range,
+                                     target.signature.local_specs))
+                sig, nd, dev = target.signature, target.nd_range, None
+            elif callable(target):
+                fns.append(target)
+                continue
+            else:  # pragma: no cover - guarded in stage()
+                raise TypeError(f"cannot fuse {target!r}")
+            if first_sig is None:
+                first_sig, first_nd = sig, nd
+            last_sig = sig
+            device = device or s.device or dev
+        if first_sig is None:
+            raise ValueError("fuse needs at least one kernel stage")
+
+        def fused_fn(*inputs):
+            vals = inputs
+            for f in fns:
+                out = f(*vals)
+                vals = out if isinstance(out, tuple) else (out,)
+            return vals
+
+        specs = tuple(first_sig.input_specs) + tuple(last_sig.output_specs)
+        mngr = self.system.opencl_manager()
+        actor = KernelActor(
+            fn=fused_fn, name=self.name,
+            nd_range=self.nd_range or first_nd, specs=specs,
+            device=device or mngr.find_device(), program=None)
+        return self.system.spawn(actor)
+
+
+def _bound_fn(fn: Callable, nd_range, local_specs,
+              known_kwargs=None) -> Callable:
+    """The stage's traceable callable with its static keyword arguments
+    (``nd_range``/``local_shapes``) bound, mirroring the facade.
+    ``known_kwargs`` reuses a :class:`KernelActor`'s cached detection."""
+    if known_kwargs is not None:
+        params = known_kwargs
+    else:
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):  # pragma: no cover - builtins
+            params = {}
+    kwargs = {}
+    if "nd_range" in params:
+        kwargs["nd_range"] = nd_range
+    if "local_shapes" in params:
+        kwargs["local_shapes"] = tuple(s.resolved_shape()
+                                       for s in local_specs)
+    if not kwargs:
+        return fn
+
+    def bound(*inputs):
+        return fn(*inputs, **kwargs)
+
+    return bound
+
+
+# ----------------------------------------------------------------------------
+# ActorPool — replicated kernel actors behind one ref
+# ----------------------------------------------------------------------------
+class ActorPool:
+    """Routes messages across worker replicas.
+
+    Policies:
+
+    * ``round_robin``  — cycle over live workers.
+    * ``least_loaded`` — pick the live worker with the fewest outstanding
+      requests, tie-broken by its device's command-queue depth
+      (``Device.queue_depth()``); a slow replica therefore stops winning
+      work as soon as it backs up.
+
+    Quacks like an :class:`ActorRef` (``send``/``request``/``ask``/
+    ``is_alive``) and exposes ``.workers`` so it plugs directly into
+    :class:`~repro.core.scheduler.ChunkScheduler`.
+    """
+
+    def __init__(self, system: ActorSystem, workers: Sequence[ActorRef], *,
+                 policy: str = "round_robin", devices: Optional[Sequence] = None):
+        if not workers:
+            raise ValueError("pool needs at least one worker")
+        if policy not in ("round_robin", "least_loaded"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.system = system
+        self.policy = policy
+        self._workers = list(workers)
+        devices = list(devices) if devices else [None] * len(self._workers)
+        self._devices = {w.actor_id: d for w, d in zip(self._workers, devices)}
+        self._outstanding = {w.actor_id: 0 for w in self._workers}
+        self._rr = itertools.count()
+        self._lock = threading.Lock()
+
+    # -- membership ------------------------------------------------------
+    @property
+    def workers(self) -> List[ActorRef]:
+        return list(self._workers)
+
+    def live_workers(self) -> List[ActorRef]:
+        return [w for w in self._workers if w.is_alive()]
+
+    def add_worker(self, ref: ActorRef, device=None) -> None:
+        with self._lock:
+            self._workers.append(ref)
+            self._devices[ref.actor_id] = device
+            self._outstanding.setdefault(ref.actor_id, 0)
+
+    def is_alive(self) -> bool:
+        return bool(self.live_workers())
+
+    def outstanding(self, ref: ActorRef) -> int:
+        return self._outstanding.get(ref.actor_id, 0)
+
+    # -- routing ------------------------------------------------------
+    def _pick(self) -> ActorRef:
+        live = self.live_workers()
+        if not live:
+            raise RuntimeError("no live workers in pool")
+        if self.policy == "round_robin":
+            return live[next(self._rr) % len(live)]
+
+        def load(w: ActorRef):
+            dev = self._devices.get(w.actor_id)
+            return (self._outstanding[w.actor_id],
+                    dev.queue_depth() if dev is not None else 0)
+
+        return min(live, key=load)
+
+    def send(self, *payload: Any) -> None:
+        self._pick().send(*payload)
+
+    def request(self, *payload: Any) -> Future:
+        with self._lock:
+            w = self._pick()
+            self._outstanding[w.actor_id] += 1
+        fut = w.request(*payload)
+
+        def _done(_f, aid=w.actor_id):
+            with self._lock:
+                self._outstanding[aid] -= 1
+
+        fut.add_done_callback(_done)
+        return fut
+
+    def ask(self, *payload: Any, timeout: Optional[float] = 120.0) -> Any:
+        return self.request(*payload).result(timeout=timeout)
+
+    def map(self, payloads: Sequence[tuple], *,
+            timeout: Optional[float] = 300.0, **scheduler_kwargs) -> list:
+        """Run every payload on some worker via :class:`ChunkScheduler`
+        (pull-based balancing + straggler re-issue)."""
+        from .scheduler import ChunkScheduler
+        return ChunkScheduler(self, **scheduler_kwargs).run(
+            payloads, timeout=timeout)
+
+    def __repr__(self):
+        return (f"ActorPool({len(self._workers)} workers, "
+                f"policy={self.policy!r})")

@@ -1,29 +1,32 @@
 """Actor composition — multi-stage kernel pipelines (paper §3.5).
 
-Two levels, exactly as the paper's design discussion (§3.6) lays out:
+The unified builder lives in :class:`repro.core.api.Pipeline`; this
+module keeps the v1 surface as thin shims plus the :class:`ComposedActor`
+runtime primitive both levels share:
 
-* :func:`compose` — **staged** composition. ``C = B ⊙ A`` spawns a new
-  actor that forwards any message to ``A`` and delegates ``A``'s response
-  to ``B`` via a response *promise*. When stages exchange
-  :class:`~repro.core.memref.DeviceRef` payloads, intermediate data stays
-  device-resident; because JAX dispatch is asynchronous, stage *n+1* is
-  enqueued while stage *n* still runs on the device — the paper's
-  OpenCL-event chaining.
+* :func:`compose` — **staged** composition (``Pipeline(mode="staged")``).
+  ``C = B ⊙ A`` spawns a new actor that forwards any message to ``A`` and
+  delegates ``A``'s response to ``B`` via a response *promise*. When
+  stages exchange :class:`~repro.core.memref.DeviceRef` payloads,
+  intermediate data stays device-resident; because JAX dispatch is
+  asynchronous, stage *n+1* is enqueued while stage *n* still runs on the
+  device — the paper's OpenCL-event chaining.
 
-* :func:`fuse` — **fused** composition ("an alternative level of
-  composition uses kernels as building blocks to compose a single OpenCL
-  actor", §3.6 — the nested-parallelism direction). The stage callables are
-  traced into one jit program, eliminating per-stage dispatch *and*
-  letting XLA fuse across stage boundaries. This is the beyond-paper
-  optimization measured in ``benchmarks/bench_iterated.py``.
+* :func:`fuse` — **fused** composition (``Pipeline(mode="fused")``; "an
+  alternative level of composition uses kernels as building blocks to
+  compose a single OpenCL actor", §3.6). The stage callables are traced
+  into one jit program, eliminating per-stage dispatch *and* letting XLA
+  fuse across stage boundaries.
+
+Both functions are deprecated in favor of the Pipeline builder.
 """
 from __future__ import annotations
 
+import warnings
 from concurrent.futures import Future
 from typing import Any, Callable, Optional, Sequence, Union
 
 from .actor import Actor, ActorRef, ActorSystem
-from .facade import KernelActor
 from .signature import NDRange
 
 __all__ = ["compose", "fuse", "ComposedActor"]
@@ -65,21 +68,14 @@ class ComposedActor(Actor):
 def compose(system: ActorSystem, *stages: ActorRef) -> ActorRef:
     """``compose(sys, A, B, C)`` builds C⊙B⊙A (A applied first).
 
+    Deprecated shim over ``Pipeline(system, mode="staged")``;
     ``ActorRef.__mul__`` provides the paper's infix form:
     ``fuse = move_elems * count_elems * prepare`` (Listing 5).
     """
-    flat: list[ActorRef] = []
-    for s in stages:
-        inner = _stages_of(system, s)
-        flat.extend(inner if inner else [s])
-    return system.spawn(ComposedActor(flat))
-
-
-def _stages_of(system: ActorSystem, ref: ActorRef) -> Optional[list]:
-    st = system._actors.get(ref.actor_id)
-    if st is not None and isinstance(st.actor, ComposedActor):
-        return st.actor.stages
-    return None
+    from .api import Pipeline  # local import: avoid cycle
+    warnings.warn("compose() is deprecated; use repro.core.Pipeline",
+                  PendingDeprecationWarning, stacklevel=2)
+    return Pipeline(system, mode="staged").stages(stages).build()
 
 
 def fuse(system: ActorSystem, *stages: Union[ActorRef, Callable],
@@ -87,58 +83,14 @@ def fuse(system: ActorSystem, *stages: Union[ActorRef, Callable],
          device=None) -> ActorRef:
     """Fuse kernel stages into a **single** jitted actor.
 
-    ``stages`` are kernel-actor refs (their traceable ``fn`` is extracted)
-    or plain callables acting as adapters between stages. The fused actor
-    takes the first stage's input signature and produces the last stage's
+    Deprecated shim over ``Pipeline(system, mode="fused")``. ``stages``
+    are kernel-actor refs (their traceable ``fn`` is extracted) or plain
+    callables acting as adapters between stages. The fused actor takes
+    the first stage's input signature and produces the last stage's
     output signature; intermediates never materialize as messages.
     """
-    fns: list[Callable] = []
-    first_ka: Optional[KernelActor] = None
-    last_ka: Optional[KernelActor] = None
-    for s in stages:
-        if isinstance(s, ActorRef):
-            st = system._actors.get(s.actor_id)
-            actor = st.actor if st else None
-            if not isinstance(actor, KernelActor):
-                raise TypeError(f"{s} is not a kernel actor; cannot fuse")
-            if first_ka is None:
-                first_ka = actor
-            last_ka = actor
-            fns.append(_plain_fn(actor))
-        elif callable(s):
-            fns.append(s)
-        else:
-            raise TypeError(f"cannot fuse {s!r}")
-    if first_ka is None:
-        raise ValueError("fuse needs at least one kernel actor stage")
-
-    def fused_fn(*inputs):
-        vals = inputs
-        for f in fns:
-            out = f(*vals)
-            vals = out if isinstance(out, tuple) else (out,)
-        return vals
-
-    specs = tuple(first_ka.signature.input_specs) + tuple(last_ka.signature.output_specs)
-    mngr = system.opencl_manager()
-    return mngr.spawn(fused_fn, name,
-                      nd_range or first_ka.nd_range, *specs,
-                      device=device or first_ka.device)
-
-
-def _plain_fn(actor: KernelActor) -> Callable:
-    """The stage's traceable callable with its static kwargs bound."""
-    kwargs = {}
-    if "nd_range" in actor._fn_kwargs:
-        kwargs["nd_range"] = actor.nd_range
-    if "local_shapes" in actor._fn_kwargs:
-        kwargs["local_shapes"] = tuple(
-            s.resolved_shape() for s in actor.signature.local_specs)
-    if not kwargs:
-        return actor.fn
-    fn = actor.fn
-
-    def bound(*inputs):
-        return fn(*inputs, **kwargs)
-
-    return bound
+    from .api import Pipeline  # local import: avoid cycle
+    warnings.warn("fuse() is deprecated; use repro.core.Pipeline",
+                  PendingDeprecationWarning, stacklevel=2)
+    return Pipeline(system, mode="fused", name=name, device=device,
+                    nd_range=nd_range).stages(stages).build()

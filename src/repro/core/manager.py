@@ -15,6 +15,7 @@ platform / device / program).
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
@@ -138,12 +139,49 @@ class DeviceManager:
               nd_range: Optional[NDRange] = None, *specs, **kwargs):
         """Spawn an OpenCL actor (paper Listing 2/3/5).
 
-        ``source`` is either a traceable callable (the JAX stand-in for
-        OpenCL C source) or a :class:`Program`; ``name`` selects the kernel
-        within a program. Optional ``preprocess``/``postprocess`` keyword
-        arguments mirror the paper's conversion functions.
+        v2 form: ``source`` is a :func:`repro.core.kernel`-decorated
+        callable (a :class:`~repro.core.api.KernelDecl`) that already
+        carries its signature and ND-range; ``name``/``nd_range`` and a
+        ``device=`` keyword act as per-spawn overrides.
+
+        v1 form (deprecated shim, kept so existing callers don't break):
+        ``source`` is a traceable callable (the JAX stand-in for OpenCL C
+        source) or a :class:`Program` plus positional ``name``,
+        ``nd_range``, and ``*specs``. Optional ``preprocess``/
+        ``postprocess`` keyword arguments mirror the paper's conversion
+        functions in both forms.
         """
-        from .facade import KernelActor  # local import: avoid cycle
+        from .api import KernelDecl     # local import: avoid cycle
+        from .facade import KernelActor
+        if isinstance(source, KernelDecl):
+            decl = source
+            overrides = {}
+            if name is not None:
+                overrides["name"] = name
+            if nd_range is not None:
+                overrides["nd_range"] = nd_range
+            if specs:
+                overrides["specs"] = specs
+            for opt in ("preprocess", "postprocess", "donate"):
+                if opt in kwargs:
+                    overrides[opt] = kwargs.pop(opt)
+            if overrides:
+                decl = decl.with_options(**overrides)
+            device = kwargs.pop("device", None) or self.find_device()
+            lazy_init = kwargs.pop("lazy_init", True)
+            if kwargs:
+                raise TypeError(f"unknown spawn options: {sorted(kwargs)}")
+            actor = KernelActor(fn=decl.fn, name=decl.name,
+                                nd_range=decl.nd_range, specs=decl.specs,
+                                device=device, program=None,
+                                preprocess=decl.preprocess,
+                                postprocess=decl.postprocess,
+                                donate=decl.donate)
+            return self.system.spawn(actor, lazy_init=lazy_init)
+        warnings.warn(
+            "positional DeviceManager.spawn(source, name, nd_range, *specs) "
+            "is deprecated; declare kernels with @repro.core.kernel",
+            PendingDeprecationWarning, stacklevel=2)
         if isinstance(source, Program):
             program, fn = source, source.retrieve(name)
             device = kwargs.pop("device", None) or program.device or self.find_device()
@@ -156,3 +194,24 @@ class DeviceManager:
                             nd_range=nd_range, specs=specs, device=device,
                             program=program, **kwargs)
         return self.system.spawn(actor)
+
+    def spawn_pool(self, source, n: int, *, policy: str = "round_robin",
+                   devices: Optional[Sequence[Device]] = None, **kwargs):
+        """Spawn ``n`` replicas of a kernel behind one pool ref.
+
+        Replicas are placed round-robin over ``devices`` (default: every
+        discovered device); the returned :class:`~repro.core.api.ActorPool`
+        routes per ``policy`` ("round_robin" | "least_loaded", the latter
+        keyed on outstanding requests then ``Device.queue_depth()``) and
+        plugs into :class:`~repro.core.scheduler.ChunkScheduler`.
+        """
+        from .api import ActorPool
+        if n < 1:
+            raise ValueError("pool size must be >= 1")
+        devs = list(devices) if devices else self.devices()
+        refs, placed = [], []
+        for i in range(n):
+            dev = devs[i % len(devs)]
+            refs.append(self.spawn(source, device=dev, **kwargs))
+            placed.append(dev)
+        return ActorPool(self.system, refs, policy=policy, devices=placed)

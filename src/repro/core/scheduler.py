@@ -78,12 +78,23 @@ class WorkItem:
 class ChunkScheduler:
     """Pull-based chunk dispatch with speculative re-issue of stragglers."""
 
-    def __init__(self, workers: Sequence[ActorRef], *,
-                 straggler_factor: float = 3.0, max_attempts: int = 3):
+    def __init__(self, workers, *,
+                 straggler_factor: float = 3.0, max_attempts: int = 3,
+                 drain_grace: float = 10.0):
+        if hasattr(workers, "workers"):  # ActorPool (repro.core.api)
+            workers = workers.workers
         self._workers: list[ActorRef] = list(workers)
         self.straggler_factor = straggler_factor
         self.max_attempts = max_attempts
-        self._lock = threading.Lock()
+        #: how long run() waits for in-flight duplicate/late callbacks to
+        #: settle before returning (keeps stats and failure-override
+        #: bookkeeping deterministic); 0 restores fire-and-forget returns
+        #: at the cost of stats that may still be counting afterwards
+        self.drain_grace = drain_grace
+        # re-entrant: a request that completes before its done-callback is
+        # registered runs on_done synchronously in the issuing thread,
+        # which already holds this lock
+        self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self.stats = {"dispatched": 0, "speculative": 0, "failed": 0}
 
@@ -114,29 +125,38 @@ class ChunkScheduler:
             raise RuntimeError("no live workers")
         deadline = None if timeout is None else time.monotonic() + timeout
 
+        inflight = 0                     # issued requests awaiting callback
+
         def issue(worker: ActorRef, item: WorkItem, speculative: bool) -> None:
+            nonlocal inflight
             item.attempts += 1
             item.issued_at = time.monotonic()
             self.stats["dispatched"] += 1
             if speculative:
                 self.stats["speculative"] += 1
+            inflight += 1
             fut = worker.request(*item.payload)
             fut.add_done_callback(lambda f: on_done(worker, item, f))
 
         def on_done(worker: ActorRef, item: WorkItem, fut: Future) -> None:
-            nonlocal remaining
+            nonlocal remaining, inflight
             with self._cv:
+                inflight -= 1
                 failed = fut.exception() is not None
                 if failed:
                     self.stats["failed"] += 1
                     if worker.is_alive():
                         idle.append(worker)
-                    if not item.done and item.index not in (
-                            i for i in outstanding) and item.attempts >= self.max_attempts:
-                        # permanently failed item: surface on wait
-                        item.result = fut.exception()
-                    elif not item.done:
-                        pending.insert(0, item)  # retry soon
+                    if not item.done:
+                        outstanding.pop(item.index, None)
+                        if item.attempts >= self.max_attempts:
+                            # permanently failed: record the exception so
+                            # run() surfaces it, and stop waiting on it
+                            item.done = True
+                            item.result = fut.exception()
+                            remaining -= 1
+                        else:
+                            pending.insert(0, item)  # retry soon
                 else:
                     durations.append(time.monotonic() - item.issued_at)
                     if not item.done:  # first completion wins
@@ -144,6 +164,10 @@ class ChunkScheduler:
                         item.result = fut.result()
                         outstanding.pop(item.index, None)
                         remaining -= 1
+                    elif isinstance(item.result, BaseException):
+                        # a speculative copy outlived a recorded permanent
+                        # failure: prefer the successful result
+                        item.result = fut.result()
                     idle.append(worker)
                 self._cv.notify_all()
 
@@ -180,6 +204,19 @@ class ChunkScheduler:
                         raise TimeoutError(
                             f"{remaining} chunks unfinished after timeout")
                 self._cv.wait(timeout=wait_for)
+
+            # drain callbacks for requests still in flight (speculative
+            # duplicates, late failures) so stats — and any success that
+            # should override a recorded permanent failure — are settled
+            # before results are assembled
+            drain_deadline = time.monotonic() + self.drain_grace
+            if deadline is not None:
+                drain_deadline = min(drain_deadline, deadline)
+            while inflight > 0:
+                wait_for = drain_deadline - time.monotonic()
+                if wait_for <= 0:
+                    break
+                self._cv.wait(timeout=min(wait_for, 0.05))
 
         results = []
         for item in items:

@@ -1,0 +1,151 @@
+"""Pipeline parallelism from stage actors (DESIGN.md §4).
+
+``make_layer_stage_actors`` slices a model's layer stack into contiguous
+stages, each owned by one actor (one mesh slice at pod scale); the
+:class:`PipelineRunner` streams microbatches through the stage chain with
+a bounded in-flight depth — the paper's async event-chaining (Listing 4)
+applied to 1F pipeline schedules: stage *n+1* of microbatch *i* overlaps
+stage *n* of microbatch *i+1*.
+
+The stage chain itself is built with the unified
+:class:`repro.core.Pipeline` surface (``mode="staged"``), so the same
+composition object covers kernel actors and model stages.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ActorRef, ActorSystem
+from repro.core.api import Pipeline
+from repro.models.layers import apply_norm
+from repro.models.transformer import embed_inputs, layer_groups, _apply_unit
+
+__all__ = ["PipelineRunner", "make_layer_stage_actors"]
+
+
+# ----------------------------------------------------------------------------
+# stage construction
+# ----------------------------------------------------------------------------
+def _positions_for(cfg, b: int, s: int):
+    base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return jnp.broadcast_to(base, (3, b, s)) if cfg.m_rope else base
+
+
+def _stage_fn(model, chunk_units, first: bool, last: bool,
+              embed, final_norm, head):
+    """A pure ``(chunk_params, x) → x`` function for one stage.
+
+    The first stage embeds tokens; the last applies the final norm and LM
+    head. Middle stages are pure residual-stream transforms, so only the
+    [B, S, D] activation crosses actor boundaries."""
+    cfg = model.cfg
+
+    def stage(chunk_params, x):
+        if first:
+            tokens = x
+            b, s = tokens.shape
+            x = embed_inputs({"embed": embed}, cfg, tokens, None)
+        else:
+            b, s = x.shape[0], x.shape[1]
+        positions = _positions_for(cfg, b, s)
+        aux = jnp.zeros((), jnp.float32)
+        for unit, lp in zip(chunk_units, chunk_params):
+            x, aux = _apply_unit(lp, cfg, unit, x, positions, aux,
+                                 model.attn_impl)
+        if last:
+            x = apply_norm(final_norm, x, cfg.norm)
+            h = embed.T if cfg.tie_embeddings else head
+            return x @ h.astype(x.dtype)
+        return x
+
+    return stage
+
+
+def make_layer_stage_actors(system: ActorSystem, model, params,
+                            n_stages: int) -> List[ActorRef]:
+    """Split the layer stack into ``n_stages`` contiguous stage actors.
+
+    The staged forward reproduces ``model.forward`` exactly (same per-layer
+    ops in the same order); only the logits (not the MoE aux loss) leave
+    the last stage."""
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        raise NotImplementedError("stage split targets decoder-only stacks")
+    units: list = []  # (unit kinds, per-layer params)
+    for gi, (unit, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        for ci in range(count):
+            units.append((unit, jax.tree.map(lambda a, ci=ci: a[ci], gp)))
+    n_layers = len(units)
+    if not 1 <= n_stages <= n_layers:
+        raise ValueError(f"n_stages={n_stages} not in [1, {n_layers}]")
+    sizes = [n_layers // n_stages + (1 if i < n_layers % n_stages else 0)
+             for i in range(n_stages)]
+    head = params.get("head")
+    stages, lo = [], 0
+    for si, sz in enumerate(sizes):
+        chunk = units[lo:lo + sz]
+        lo += sz
+        fn = _stage_fn(model, [u for u, _ in chunk],
+                       first=(si == 0), last=(si == n_stages - 1),
+                       embed=params["embed"],
+                       final_norm=params["final_norm"], head=head)
+        jitted = jax.jit(fn)
+        chunk_params = [p for _, p in chunk]
+        stages.append(system.spawn(
+            lambda x, _f=jitted, _p=chunk_params: _f(_p, x)))
+    return stages
+
+
+# ----------------------------------------------------------------------------
+# microbatch streaming
+# ----------------------------------------------------------------------------
+class PipelineRunner:
+    """Streams microbatches through a stage chain with ≤ ``depth`` in
+    flight; results come back in submission order and the first stage
+    failure aborts the run."""
+
+    def __init__(self, system: ActorSystem, stages: Sequence[ActorRef],
+                 depth: int = 2):
+        if not stages:
+            raise ValueError("need at least one stage")
+        self.depth = depth
+        self._chain = Pipeline(system, mode="staged").stages(stages).build()
+
+    def run(self, microbatches: Sequence[Any],
+            timeout: Optional[float] = 300.0) -> list:
+        sem = threading.Semaphore(self.depth)
+        results: list = [None] * len(microbatches)
+        first_error: list = [None]
+        futures = []
+        for i, mb in enumerate(microbatches):
+            sem.acquire()
+            if first_error[0] is not None:
+                sem.release()
+                break
+            payload = mb if isinstance(mb, tuple) else (mb,)
+            fut = self._chain.request(*payload)
+
+            def _done(f, i=i):
+                exc = f.exception()
+                if exc is not None:
+                    if first_error[0] is None:
+                        first_error[0] = exc
+                else:
+                    results[i] = f.result()
+                sem.release()
+
+            fut.add_done_callback(_done)
+            futures.append(fut)
+        for f in futures:
+            try:
+                f.result(timeout)
+            except Exception:
+                pass  # recorded by the callback; first error wins
+        if first_error[0] is not None:
+            raise first_error[0]
+        return results

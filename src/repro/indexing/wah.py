@@ -139,17 +139,18 @@ def decode_wah_bitmap(index_words: np.ndarray, start: int, count: int) -> np.nda
 # ----------------------------------------------------------------------------
 # Actor-pipeline variant (paper Listing 5): three kernel actors composed.
 # ----------------------------------------------------------------------------
-def wah_index_pipeline_actors(system, k: int):
-    """Spawn ``move_elems * count_elems * prepare`` for length-``k`` inputs.
+def wah_index_pipeline_actors(system, k: int, mode: str = "staged"):
+    """Build the prepare → count → move pipeline for length-``k`` inputs.
 
-    The returned composed actor accepts ``(fills, literals)`` (uint32, length
-    k) and responds with ``(index_words, n_words)``. Intermediates travel as
-    ``DeviceRef``s — data stays on the device between stages.
+    The returned pipeline ref accepts ``(fills, literals)`` (uint32, length
+    k) and responds with ``(index_words, n_words)``. In ``staged`` mode
+    (paper Listing 5) intermediates travel as ``DeviceRef``s — data stays
+    on the device between stages; ``fused`` traces the three kernels into
+    one program.
     """
-    from repro.core import In, NDRange, Out, dim_vec
+    from repro.core import In, NDRange, Out, Pipeline, dim_vec, kernel
     from repro.kernels.stream_compact import pallas_local_compact
 
-    mngr = system.opencl_manager()
     bs = 256
     assert (2 * k) % bs == 0
 
@@ -175,15 +176,17 @@ def wah_index_pipeline_actors(system, k: int):
 
     rng = NDRange(dim_vec(k))
     rng_sc = NDRange(dim_vec(2 * k), local_dims=dim_vec(bs))
-    prepare = mngr.spawn(prepare_index, "prepare_index", rng,
-                         In(jnp.uint32), In(jnp.uint32),
-                         Out(jnp.uint32, as_ref=True))
-    count = mngr.spawn(count_elements, "count_elements", rng_sc,
-                       In(jnp.uint32),
-                       Out(jnp.uint32, as_ref=True),
-                       Out(jnp.uint32, as_ref=True),
-                       Out(jnp.int32, as_ref=True))
-    move = mngr.spawn(move_valid_elements, "move_valid_elements", rng_sc,
-                      In(jnp.uint32), In(jnp.uint32), In(jnp.int32),
-                      Out(jnp.uint32), Out(jnp.int32))
-    return move * count * prepare
+    prepare = kernel(In(jnp.uint32), In(jnp.uint32),
+                     Out(jnp.uint32, as_ref=True),
+                     nd_range=rng, name="prepare_index")(prepare_index)
+    count = kernel(In(jnp.uint32),
+                   Out(jnp.uint32, as_ref=True),
+                   Out(jnp.uint32, as_ref=True),
+                   Out(jnp.int32, as_ref=True),
+                   nd_range=rng_sc, name="count_elements")(count_elements)
+    move = kernel(In(jnp.uint32), In(jnp.uint32), In(jnp.int32),
+                  Out(jnp.uint32), Out(jnp.int32),
+                  nd_range=rng_sc, name="move_valid_elements")(
+                      move_valid_elements)
+    return (Pipeline(system, mode=mode, name="wah_index")
+            .stage(prepare).stage(count).stage(move).build())
