@@ -2,20 +2,27 @@
 tasks driven by actor messages vs the native loop. The paper measured
 7–8 % messaging overhead; we additionally report the **fused composition**
 variant (DESIGN.md §2) where stages are traced into one XLA program —
-the beyond-paper optimization that removes per-stage dispatch entirely."""
+the beyond-paper optimization that removes per-stage dispatch entirely.
+
+The second half benchmarks the DeviceRef data plane (ISSUE 2): the same
+multi-stage chain run (a) with host round-trips between every stage, (b)
+staged with refs forwarded on device, (c) fused — reporting wall time
+*and* the registry's host-transfer counts for each."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ActorSystem, In, NDRange, Out, Pipeline, dim_vec, kernel
+from repro.core import (ActorSystem, In, NDRange, Out, Pipeline, dim_vec,
+                        kernel, memory_stats, reset_transfer_stats)
 from repro.kernels import ops
 
 from .common import emit, timeit
 
 _N = 256
 _ITERS = 100
+_STAGES = 4
 
 
 @kernel(In(jnp.float32), Out(jnp.float32, as_ref=True),
@@ -65,6 +72,66 @@ def run() -> None:
              f"overhead={100 * (t_actor - t_native) / t_native:.1f}%")
         emit("iterated_fused", t_fused / _ITERS * 1e6,
              f"vs_native={100 * (t_fused - t_native) / t_native:+.1f}%")
+
+        _run_data_plane(system, a)
+
+
+def _host_transfers(stats: dict) -> int:
+    return stats["transfers"] + stats["readbacks"] + stats["spills"]
+
+
+def _run_data_plane(system, a) -> None:
+    """Staged-vs-fused-vs-host-roundtrip over an ``_STAGES``-long chain,
+    reporting the host-transfer count alongside wall time."""
+    reps = _ITERS // 10
+
+    # (a) host round-trip: independent value-semantics workers, results
+    # bounce through the host between every hop
+    workers = [system.spawn(_m_stage.with_options(name=f"hop{i}"))
+               for i in range(_STAGES)]
+
+    def hop_loop():
+        x = a
+        for _ in range(reps):
+            for w in workers:
+                x = w.ask(x)
+        np.asarray(x)
+
+    # (b) staged: one pipeline, DeviceRefs forwarded between stages
+    staged = Pipeline(system, mode="staged", name="staged4").stages(
+        [_m_stage] * _STAGES).build()
+
+    def staged_loop():
+        x = a
+        for _ in range(reps):
+            x = staged.ask(x)
+        np.asarray(x)
+
+    # (c) fused: all stages traced into one program
+    fused4 = Pipeline(system, mode="fused", name="fused4").stages(
+        [_m_stage] * _STAGES).build()
+
+    def fused_loop():
+        x = a
+        for _ in range(reps):
+            x = fused4.ask(x)
+        np.asarray(x)
+
+    calls = reps * _STAGES
+    for name, fn in (("chain_host_roundtrip", hop_loop),
+                     ("chain_staged_refs", staged_loop),
+                     ("chain_fused", fused_loop)):
+        t = timeit(fn, repeat=3)
+        reset_transfer_stats()
+        fn()
+        n_x = _host_transfers(memory_stats())
+        emit(name, t / calls * 1e6, f"host_transfers_per_run={n_x}")
+
+
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="m_stage")
+def _m_stage(x):
+    return ops.ref.matmul(x, x)
 
 
 if __name__ == "__main__":

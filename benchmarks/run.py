@@ -1,7 +1,13 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper figure (3, 4, 5, 6, 7/8) plus
-the roofline table from the dry-run artifacts."""
+the roofline table from the dry-run artifacts. Writes a ``BENCH_PR2.json``
+perf snapshot (rows + DeviceRef registry traffic counters) at the repo
+root so PR-over-PR trajectories are diffable."""
+import json
+import pathlib
+import platform
 import sys
+import time
 
 
 def main() -> None:
@@ -14,6 +20,29 @@ def main() -> None:
     print("\n== roofline table (from dry-run artifacts) ==")
     from . import roofline_table
     roofline_table.run()
+    _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import jax
+
+    from repro.core import memory_stats
+
+    from .common import ROWS
+
+    snap = {
+        "pr": 2,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in ROWS],
+        "memref": memory_stats(),
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR2.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"\nwrote {out}")
 
 
 if __name__ == '__main__':

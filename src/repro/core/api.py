@@ -44,6 +44,7 @@ from concurrent.futures import Future
 from typing import Any, Callable, List, Optional, Sequence, Union
 
 from .actor import ActorRef, ActorSystem
+from .memref import payload_device
 from .signature import KernelSignature, NDRange
 
 __all__ = ["kernel", "KernelDecl", "Pipeline", "ActorPool"]
@@ -211,18 +212,66 @@ class Pipeline:
         return self._build_fused()
 
     def _build_staged(self) -> ActorRef:
+        """Staged (event-chained) composition, Listing 4 style.
+
+        Intermediate kernel stages are spawned with ``emit="ref"`` whenever
+        the *next* stage can unwrap a :class:`~repro.core.memref.DeviceRef`
+        (i.e. is itself a kernel stage), so data stays device-resident
+        between hops and only the final stage honours its declared value/
+        reference semantics. Existing kernel-actor refs are cloned rather
+        than mutated; opaque actors and bare-callable adapters keep value
+        payloads.
+        """
         from .compose import ComposedActor
         mngr = self.system.opencl_manager()
-        flat: List[ActorRef] = []
+        # flatten to (kind, target, device), inlining pre-composed chains
+        entries: List[tuple] = []
         for s in self._stages:
             if isinstance(s.target, KernelDecl):
-                flat.append(mngr.spawn(s.target,
-                                       device=s.device or self.device))
+                entries.append(("decl", s.target, s.device or self.device))
             elif isinstance(s.target, ActorRef):
                 inner = self._composed_stages_of(s.target)
-                flat.extend(inner if inner else [s.target])
+                for r in (inner if inner else [s.target]):
+                    kind = ("kernel_ref" if self._kernel_actor_of(r)
+                            else "opaque_ref")
+                    entries.append((kind, r, None))
             else:
-                flat.append(self.system.spawn(s.target))
+                entries.append(("fn", s.target, None))
+
+        def ref_capable(i: int) -> bool:
+            # a stage can consume DeviceRefs if it is a kernel stage with
+            # no preprocess: a preprocess runs on the raw payload *before*
+            # the facade's ref unwrapping, so it must see values
+            if i >= len(entries):
+                return False
+            kind, target, _ = entries[i]
+            if kind == "decl":
+                return target.preprocess is None
+            if kind == "kernel_ref":
+                ka = self._kernel_actor_of(target)
+                return ka is not None and ka.preprocess is None
+            return False
+
+        flat: List[ActorRef] = []
+        for i, (kind, target, device) in enumerate(entries):
+            # forward device-resident refs when the successor can consume
+            # them; the last stage keeps its declared semantics
+            forward = i + 1 < len(entries) and ref_capable(i + 1)
+            if kind == "decl":
+                emit = ("ref" if forward and target.postprocess is None
+                        else "declared")
+                flat.append(mngr.spawn(target, device=device, emit=emit))
+            elif kind == "kernel_ref":
+                ka = self._kernel_actor_of(target)
+                if (forward and ka is not None and ka.emit != "ref"
+                        and ka.postprocess is None):
+                    flat.append(self.system.spawn(ka.clone(emit="ref")))
+                else:
+                    flat.append(target)
+            elif kind == "opaque_ref":
+                flat.append(target)
+            else:
+                flat.append(self.system.spawn(target))
         if len(flat) == 1:
             return flat[0]
         return self.system.spawn(ComposedActor(flat))
@@ -315,12 +364,18 @@ class ActorPool:
     * ``round_robin``  — cycle over live workers.
     * ``least_loaded`` — pick the live worker with the fewest outstanding
       requests, tie-broken by its device's command-queue depth
-      (``Device.queue_depth()``); a slow replica therefore stops winning
-      work as soon as it backs up.
+      (``Device.queue_depth()``) and then by the device's live ref bytes
+      (the ``DeviceManager`` memory watermark); a slow or memory-pressured
+      replica therefore stops winning work as soon as it backs up.
+
+    Routing is **placement-aware**: when a payload carries a
+    :class:`~repro.core.memref.DeviceRef`, workers whose device already
+    holds that data are preferred (zero-copy dispatch), load-ranked among
+    themselves.
 
     Quacks like an :class:`ActorRef` (``send``/``request``/``ask``/
-    ``is_alive``) and exposes ``.workers`` so it plugs directly into
-    :class:`~repro.core.scheduler.ChunkScheduler`.
+    ``is_alive``) and exposes ``.workers``/``.placements`` so it plugs
+    directly into :class:`~repro.core.scheduler.ChunkScheduler`.
     """
 
     def __init__(self, system: ActorSystem, workers: Sequence[ActorRef], *,
@@ -341,10 +396,19 @@ class ActorPool:
     # -- membership ------------------------------------------------------
     @property
     def workers(self) -> List[ActorRef]:
-        return list(self._workers)
+        with self._lock:
+            return list(self._workers)
+
+    @property
+    def placements(self) -> dict:
+        """``actor_id → Device`` (or None) — consumed by
+        :class:`~repro.core.scheduler.ChunkScheduler` for placement-aware
+        chunk routing."""
+        with self._lock:
+            return dict(self._devices)
 
     def live_workers(self) -> List[ActorRef]:
-        return [w for w in self._workers if w.is_alive()]
+        return [w for w in self.workers if w.is_alive()]
 
     def add_worker(self, ref: ActorRef, device=None) -> None:
         with self._lock:
@@ -356,35 +420,51 @@ class ActorPool:
         return bool(self.live_workers())
 
     def outstanding(self, ref: ActorRef) -> int:
-        return self._outstanding.get(ref.actor_id, 0)
+        with self._lock:
+            return self._outstanding.get(ref.actor_id, 0)
 
     # -- routing ------------------------------------------------------
-    def _pick(self) -> ActorRef:
-        live = self.live_workers()
+    def _pick(self, payload: tuple = ()) -> ActorRef:
+        # caller must hold self._lock (routing state: _rr, _outstanding)
+        live = [w for w in self._workers if w.is_alive()]
         if not live:
             raise RuntimeError("no live workers in pool")
-        if self.policy == "round_robin":
+        pref = payload_device(payload)
+        if pref is not None:
+            local = [w for w in live
+                     if (d := self._devices.get(w.actor_id)) is not None
+                     and d.jax_device == pref]
+            if local:
+                live = local
+        if self.policy == "round_robin" and pref is None:
             return live[next(self._rr) % len(live)]
 
         def load(w: ActorRef):
             dev = self._devices.get(w.actor_id)
-            return (self._outstanding[w.actor_id],
-                    dev.queue_depth() if dev is not None else 0)
+            return (self._outstanding.get(w.actor_id, 0),
+                    dev.queue_depth() if dev is not None else 0,
+                    dev.live_bytes() if dev is not None else 0)
 
         return min(live, key=load)
 
     def send(self, *payload: Any) -> None:
-        self._pick().send(*payload)
+        with self._lock:
+            w = self._pick(payload)
+        w.send(*payload)
 
     def request(self, *payload: Any) -> Future:
         with self._lock:
-            w = self._pick()
-            self._outstanding[w.actor_id] += 1
+            w = self._pick(payload)
+            aid = w.actor_id
+            self._outstanding[aid] = self._outstanding.get(aid, 0) + 1
         fut = w.request(*payload)
 
-        def _done(_f, aid=w.actor_id):
+        # the decrement runs in the done-callback *under the pool lock*,
+        # pairing with the locked increment above so the counter can never
+        # go negative or be lost under concurrent request() callers
+        def _done(_f, aid=aid):
             with self._lock:
-                self._outstanding[aid] -= 1
+                self._outstanding[aid] = self._outstanding.get(aid, 0) - 1
 
         fut.add_done_callback(_done)
         return fut

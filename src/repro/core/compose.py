@@ -27,6 +27,7 @@ from concurrent.futures import Future
 from typing import Any, Callable, Optional, Sequence, Union
 
 from .actor import Actor, ActorRef, ActorSystem
+from .memref import DeviceRef
 from .signature import NDRange
 
 __all__ = ["compose", "fuse", "ComposedActor"]
@@ -34,7 +35,14 @@ __all__ = ["compose", "fuse", "ComposedActor"]
 
 class ComposedActor(Actor):
     """Forwards messages through ``stages`` left→right, responding with the
-    final stage's result (promise delegation, paper §3.5)."""
+    final stage's result (promise delegation, paper §3.5).
+
+    Intermediate :class:`DeviceRef` results are owned by the chain: once
+    the next stage has consumed a forwarded ref, it is released (paper:
+    "dropping a reference argument simply releases its memory on the
+    device"), so a pipeline run leaves no live intermediate refs behind.
+    The caller's input refs and the final stage's result are never touched.
+    """
 
     def __init__(self, stages: Sequence[ActorRef]):
         super().__init__()
@@ -44,23 +52,37 @@ class ComposedActor(Actor):
 
     def receive(self, *payload: Any) -> Future:
         out: Future = Future()
-        self._run_stage(0, payload, out)
+        self._run_stage(0, payload, out, owned=())
         return out  # promise: the runtime delegates the response
 
-    def _run_stage(self, idx: int, payload, out: Future) -> None:
+    def _run_stage(self, idx: int, payload, out: Future,
+                   owned: tuple = ()) -> None:
         fut = self.stages[idx].request(*payload)
 
         def _done(f: Future):
             exc = f.exception()
             if exc is not None:
+                for r in owned:
+                    r.release()
                 out.set_exception(exc)
                 return
             result = f.result()
             nxt = result if isinstance(result, tuple) else (result,)
+            # stage idx has consumed its inputs: refs the chain owns
+            # (produced by stage idx-1) are dead now — drop their buffers,
+            # EXCEPT any ref the stage passed through into its own result
+            # (still in flight, or owed to the caller at the final stage).
+            # release() is idempotent, so donated in_out refs are fine.
+            passing = {id(v) for v in nxt if isinstance(v, DeviceRef)}
+            for r in owned:
+                if id(r) not in passing:
+                    r.release()
             if idx + 1 == len(self.stages):
                 out.set_result(result)
             else:
-                self._run_stage(idx + 1, nxt, out)
+                self._run_stage(
+                    idx + 1, nxt, out,
+                    owned=tuple(v for v in nxt if isinstance(v, DeviceRef)))
 
         fut.add_done_callback(_done)
 
@@ -74,7 +96,7 @@ def compose(system: ActorSystem, *stages: ActorRef) -> ActorRef:
     """
     from .api import Pipeline  # local import: avoid cycle
     warnings.warn("compose() is deprecated; use repro.core.Pipeline",
-                  PendingDeprecationWarning, stacklevel=2)
+                  DeprecationWarning, stacklevel=2)
     return Pipeline(system, mode="staged").stages(stages).build()
 
 
@@ -91,6 +113,6 @@ def fuse(system: ActorSystem, *stages: Union[ActorRef, Callable],
     """
     from .api import Pipeline  # local import: avoid cycle
     warnings.warn("fuse() is deprecated; use repro.core.Pipeline",
-                  PendingDeprecationWarning, stacklevel=2)
+                  DeprecationWarning, stacklevel=2)
     return Pipeline(system, mode="fused", name=name, device=device,
                     nd_range=nd_range).stages(stages).build()

@@ -26,6 +26,11 @@ class SignatureMismatch(ActorError):
     """Message payload does not match the kernel signature (paper §3.4)."""
 
 
+class AccessViolation(ActorError):
+    """Operation not permitted by a DeviceRef's access rights (paper §3.5:
+    "a reference type includes ... memory access rights")."""
+
+
 @dataclasses.dataclass(frozen=True)
 class DownMessage:
     """Sent to monitors when a watched actor terminates (paper §2.1)."""

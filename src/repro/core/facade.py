@@ -18,7 +18,17 @@ Whenever the facade receives a message it (paper's three-part behavior,
 
 ``InOut`` arguments are donated to XLA so the update happens in place,
 matching OpenCL's read-write buffer semantics; the incoming ``DeviceRef``
-(if any) is invalidated, making buffer ownership transfer explicit.
+(if any) is **donated** (``DeviceRef.donate()``), making buffer ownership
+transfer explicit — using the ref afterwards raises.
+
+DeviceRefs are the native currency on both sides of the behavior: incoming
+refs are unwrapped (with access-rights checks — an ``in`` argument needs
+read rights, ``in_out`` needs read+write), outgoing arrays are wrapped as
+refs whenever the spec asks for reference semantics *or* the actor was
+spawned with ``emit="ref"`` (how ``Pipeline`` keeps intermediate stages
+device-resident). The facade itself never calls ``to_value()``; the only
+host read-back is the explicit value-semantics path, counted in the
+registry as a ``readback``.
 """
 from __future__ import annotations
 
@@ -31,9 +41,9 @@ import jax
 import numpy as np
 
 from .actor import Actor
-from .errors import SignatureMismatch
+from .errors import AccessViolation, SignatureMismatch
 from .manager import Device, Program
-from .memref import DeviceRef, as_device_array
+from .memref import DeviceRef, as_device_array, registry
 from .signature import In, InOut, KernelSignature, Local, NDRange, Out
 
 __all__ = ["KernelActor"]
@@ -47,8 +57,10 @@ class KernelActor(Actor):
                  program: Optional[Program] = None,
                  preprocess: Optional[Callable] = None,
                  postprocess: Optional[Callable] = None,
-                 donate: bool = True):
+                 donate: bool = True, emit: str = "declared"):
         super().__init__()
+        if emit not in ("declared", "ref"):
+            raise ValueError(f"emit must be 'declared' or 'ref', got {emit!r}")
         self.fn = fn
         self.kernel_name = name
         self.nd_range = nd_range
@@ -58,6 +70,9 @@ class KernelActor(Actor):
         self.preprocess = preprocess
         self.postprocess = postprocess
         self.donate = donate
+        #: "declared" honours each Out spec's as_ref; "ref" forces every
+        #: output to stay device-resident (intermediate pipeline stages)
+        self.emit = emit
         self._jitted = None
         # Kernels may want the index space / local sizes / resolved output
         # shapes; detect which keywords the callable accepts once.
@@ -112,9 +127,20 @@ class KernelActor(Actor):
         consumed_refs = []
         for spec, value in zip(sig.input_specs, inputs):
             if isinstance(value, DeviceRef):
-                arr = value.array
+                if not value.readable:
+                    raise AccessViolation(
+                        f"kernel {self.kernel_name!r}: {spec.direction!r} "
+                        f"argument requires read rights, ref grants "
+                        f"{value.access!r}")
                 if spec.direction == "in_out":
-                    consumed_refs.append(value)
+                    if not value.writable:
+                        raise AccessViolation(
+                            f"kernel {self.kernel_name!r}: 'in_out' argument "
+                            f"requires write rights, ref grants "
+                            f"{value.access!r}")
+                    if self.donate:
+                        consumed_refs.append(value)
+                arr = value.array
             else:
                 # Untyped Python scalars/lists adopt the spec dtype; arrays
                 # keep theirs so mismatches are caught (pattern matching).
@@ -137,9 +163,10 @@ class KernelActor(Actor):
         finally:
             self.device._dispatch_finished()
 
-        # donated buffers: ownership moved into the kernel
+        # donated buffers: ownership moved into the kernel (donate-after-use
+        # on the incoming ref now raises)
         for ref in consumed_refs:
-            ref.release()
+            ref.donate()
 
         if len(outputs) != len(sig.output_specs):
             raise SignatureMismatch(
@@ -151,10 +178,11 @@ class KernelActor(Actor):
                 raise SignatureMismatch(
                     f"kernel {self.kernel_name!r}: output dtype {arr.dtype} "
                     f"does not match spec {spec.np_dtype}")
-            if spec.as_ref:
+            if spec.as_ref or self.emit == "ref":
                 response.append(DeviceRef(arr))      # stays device-resident
             else:
-                response.append(np.asarray(jax.device_get(arr)))  # read-back
+                registry.count_readback()            # explicit host read-back
+                response.append(np.asarray(jax.device_get(arr)))
         result = tuple(response)
         if self.postprocess is not None:
             result = self.postprocess(*result)
@@ -163,6 +191,18 @@ class KernelActor(Actor):
         if result is None:
             return None
         return result[0] if len(result) == 1 else result
+
+    def clone(self, emit: Optional[str] = None) -> "KernelActor":
+        """A fresh (unspawned) actor sharing this one's declaration.
+
+        ``Pipeline._build_staged`` uses this to derive ref-emitting
+        intermediate stages from existing actors without mutating them."""
+        return KernelActor(fn=self.fn, name=self.kernel_name,
+                           nd_range=self.nd_range,
+                           specs=self.signature.specs, device=self.device,
+                           program=self.program, preprocess=self.preprocess,
+                           postprocess=self.postprocess, donate=self.donate,
+                           emit=emit or self.emit)
 
     def on_exit(self, reason):
         self._jitted = None

@@ -26,7 +26,8 @@ __all__ = ["Platform", "Device", "Program", "DeviceManager"]
 
 
 class Device:
-    """An accelerator device with a dispatch (command-queue) counter."""
+    """An accelerator device with a dispatch (command-queue) counter and
+    live-memory watermarks (fed by the DeviceRef registry)."""
 
     def __init__(self, jax_device: jax.Device, platform: "Platform"):
         self.jax_device = jax_device
@@ -45,6 +46,17 @@ class Device:
     def queue_depth(self) -> int:
         return self._inflight
 
+    # -- memory watermarks (DeviceRef registry) -------------------------------
+    def live_bytes(self) -> int:
+        """Bytes currently held by live DeviceRefs on this device."""
+        from .memref import registry
+        return registry.live_bytes(self.jax_device)
+
+    def peak_bytes(self) -> int:
+        """High watermark of DeviceRef bytes ever resident on this device."""
+        from .memref import registry
+        return registry.peak_bytes(self.jax_device)
+
     def _dispatch_started(self):
         with self._lock:
             self._inflight += 1
@@ -54,7 +66,8 @@ class Device:
             self._inflight -= 1
 
     def __repr__(self):
-        return f"Device({self.name}, inflight={self._inflight})"
+        return (f"Device({self.name}, inflight={self._inflight}, "
+                f"live_bytes={self.live_bytes()})")
 
 
 class Platform:
@@ -130,6 +143,15 @@ class DeviceManager:
             raise LookupError(f"no device for platform={platform!r}")
         return devs[index]
 
+    def memory_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-device memory watermarks: live DeviceRef bytes, the peak
+        (high watermark), and current dispatch queue depth — the signals
+        the pool's least-loaded policy ranks by."""
+        return {d.name: {"live_bytes": d.live_bytes(),
+                         "peak_bytes": d.peak_bytes(),
+                         "queue_depth": d.queue_depth()}
+                for d in self.devices()}
+
     # -- program / actor creation -------------------------------------------
     def create_program(self, kernels: Dict[str, Callable],
                        device: Optional[Device] = None, **options) -> Program:
@@ -169,6 +191,7 @@ class DeviceManager:
                 decl = decl.with_options(**overrides)
             device = kwargs.pop("device", None) or self.find_device()
             lazy_init = kwargs.pop("lazy_init", True)
+            emit = kwargs.pop("emit", "declared")
             if kwargs:
                 raise TypeError(f"unknown spawn options: {sorted(kwargs)}")
             actor = KernelActor(fn=decl.fn, name=decl.name,
@@ -176,7 +199,7 @@ class DeviceManager:
                                 device=device, program=None,
                                 preprocess=decl.preprocess,
                                 postprocess=decl.postprocess,
-                                donate=decl.donate)
+                                donate=decl.donate, emit=emit)
             return self.system.spawn(actor, lazy_init=lazy_init)
         warnings.warn(
             "positional DeviceManager.spawn(source, name, nd_range, *specs) "

@@ -1,8 +1,10 @@
 """Device-resident memory references — the paper's ``mem_ref<T>`` (§3.5).
 
 A :class:`DeviceRef` represents data living on an accelerator device. It is
-what OpenCL actors forward between pipeline stages so that intermediate
-results never round-trip through host memory.
+the *currency* of the runtime: kernel actors accept and emit refs natively,
+pipeline stages forward them so intermediate results never round-trip
+through host memory, and pools/schedulers route work toward the device a
+ref already lives on.
 
 JAX adaptation (DESIGN.md §2): a dispatched computation returns a
 ``jax.Array`` immediately — the array *is* the completion event. Wrapping
@@ -12,27 +14,190 @@ machinery: stage *n+1* may enqueue against the ref before stage *n* has
 finished executing on the device; XLA's runtime resolves the dependency.
 
 Like the paper's reference type, a ``DeviceRef`` carries element type,
-length, and access rights, and it is bound to the local process — we take
-the paper's option (a) for distribution: serialization raises, making
-expensive cross-node copies explicit (``to_value()``).
+length, and **access rights** ("r", "w", "rw") which are enforced: reading
+a write-only ref or donating a read-only ref raises
+:class:`~repro.core.errors.AccessViolation`. For distribution the paper
+offers two options — (a) prohibit serialization, (b) serialize through an
+explicit host copy. We implement both: a device-resident ref refuses to
+pickle, while :meth:`DeviceRef.spill` moves the payload to host memory at
+an explicit boundary, after which the ref pickles and can be
+:meth:`~DeviceRef.unspill`\\ ed on the receiving side.
+
+Every ref is accounted in the process-wide :class:`RefRegistry`: per-device
+live bytes (with a high watermark feeding placement policies) plus the
+host-transfer counters the zero-copy tests assert on.
 """
 from __future__ import annotations
 
 import threading
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["DeviceRef", "as_device_array", "live_ref_count"]
+from .errors import AccessViolation
 
-_live = 0
-_live_lock = threading.Lock()
+__all__ = [
+    "DeviceRef",
+    "RefRegistry",
+    "registry",
+    "as_device_array",
+    "live_ref_count",
+    "transfer_count",
+    "reset_transfer_stats",
+    "memory_stats",
+    "payload_device",
+]
+
+_ACCESS_MODES = ("r", "w", "rw")
+
+
+def _device_of(arr) -> Optional[jax.Device]:
+    """The ``jax.Device`` holding ``arr`` (single-device arrays)."""
+    try:
+        devs = arr.devices()
+        if len(devs) == 1:
+            return next(iter(devs))
+    except Exception:  # pragma: no cover - tracers / older jax
+        pass
+    dev = getattr(arr, "device", None)
+    return dev if isinstance(dev, jax.Device) else None
+
+
+class RefRegistry:
+    """Process-wide accounting of live :class:`DeviceRef`\\ s.
+
+    Tracks the live-ref count (leak checks), per-device live bytes with a
+    high watermark (``DeviceManager`` exposes these to the pool's
+    least-loaded placement), and the device↔host traffic counters:
+
+    * ``transfers``  — explicit ``to_value()`` read-backs
+    * ``readbacks``  — kernel-actor value-semantics outputs
+    * ``spills`` / ``unspills`` — explicit serialization boundaries
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._bytes: Dict[Any, int] = {}
+        self._peak: Dict[Any, int] = {}
+        self.transfers = 0
+        self.readbacks = 0
+        self.spills = 0
+        self.unspills = 0
+
+    # -- ref lifecycle (called by DeviceRef) ---------------------------------
+    def on_create(self, device, nbytes: int, resident: bool) -> None:
+        with self._lock:
+            self._count += 1
+            if resident:
+                self._add_bytes(device, nbytes)
+
+    def on_resident(self, device, nbytes: int) -> None:
+        with self._lock:
+            self._add_bytes(device, nbytes)
+
+    def on_evict(self, device, nbytes: int) -> None:
+        with self._lock:
+            self._bytes[device] = self._bytes.get(device, 0) - nbytes
+
+    def on_retire(self, device, nbytes: int, resident: bool) -> None:
+        with self._lock:
+            self._count -= 1
+            if resident:
+                self._bytes[device] = self._bytes.get(device, 0) - nbytes
+
+    def _add_bytes(self, device, nbytes: int) -> None:
+        b = self._bytes.get(device, 0) + nbytes
+        self._bytes[device] = b
+        if b > self._peak.get(device, 0):
+            self._peak[device] = b
+
+    # -- traffic counters -----------------------------------------------------
+    def count_transfer(self) -> None:
+        with self._lock:
+            self.transfers += 1
+
+    def count_readback(self) -> None:
+        with self._lock:
+            self.readbacks += 1
+
+    def count_spill(self) -> None:
+        with self._lock:
+            self.spills += 1
+
+    def count_unspill(self) -> None:
+        with self._lock:
+            self.unspills += 1
+
+    # -- queries ------------------------------------------------------
+    def live_count(self) -> int:
+        return self._count
+
+    def live_bytes(self, device=None) -> int:
+        with self._lock:
+            if device is None:
+                return sum(self._bytes.values())
+            return self._bytes.get(device, 0)
+
+    def peak_bytes(self, device=None) -> int:
+        with self._lock:
+            if device is None:
+                return sum(self._peak.values())
+            return self._peak.get(device, 0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "live_refs": self._count,
+                "live_bytes": sum(self._bytes.values()),
+                "peak_bytes": sum(self._peak.values()),
+                "transfers": self.transfers,
+                "readbacks": self.readbacks,
+                "spills": self.spills,
+                "unspills": self.unspills,
+            }
+
+    def reset_traffic(self) -> None:
+        """Zero the host-traffic counters (not the live accounting)."""
+        with self._lock:
+            self.transfers = 0
+            self.readbacks = 0
+            self.spills = 0
+            self.unspills = 0
+
+
+#: the process-wide registry every DeviceRef reports to
+registry = RefRegistry()
 
 
 def live_ref_count() -> int:
     """Number of un-released DeviceRefs (used by tests/leak checks)."""
-    return _live
+    return registry.live_count()
+
+
+def transfer_count() -> int:
+    """Explicit ``DeviceRef.to_value()`` device→host copies so far."""
+    return registry.transfers
+
+
+def reset_transfer_stats() -> None:
+    """Zero the host-traffic counters (transfers/readbacks/spills)."""
+    registry.reset_traffic()
+
+
+def memory_stats() -> dict:
+    """Registry snapshot: live refs/bytes, watermark, traffic counters."""
+    return registry.stats()
+
+
+def payload_device(payload) -> Optional[jax.Device]:
+    """The device the first :class:`DeviceRef` in ``payload`` lives on, or
+    ``None`` — the placement hint pools and schedulers route by."""
+    for v in payload:
+        if isinstance(v, DeviceRef) and v.device is not None and not v.is_spilled:
+            return v.device
+    return None
 
 
 class DeviceRef:
@@ -41,21 +206,34 @@ class DeviceRef:
     Attributes mirror the paper's description: "a reference type includes
     type information about the data it references in addition to the amount
     of bytes it refers to and memory access rights."
+
+    Lifecycle states: ``live`` (device-resident) → ``spilled`` (host copy,
+    device buffer dropped; picklable) ↔ ``live``; terminal states are
+    ``donated`` (buffer ownership transferred into a kernel) and
+    ``released``.
     """
 
-    __slots__ = ("_array", "dtype", "shape", "access", "_released", "__weakref__")
+    __slots__ = ("_array", "_host", "dtype", "shape", "access", "device",
+                 "_state", "__weakref__")
 
     def __init__(self, array: jax.Array, access: str = "rw"):
-        if access not in ("r", "w", "rw"):
+        if access not in _ACCESS_MODES:
             raise ValueError("access must be 'r', 'w' or 'rw'")
         self._array = array
+        self._host = None
         self.dtype = array.dtype
         self.shape = tuple(array.shape)
         self.access = access
-        self._released = False
-        global _live
-        with _live_lock:
-            _live += 1
+        self.device = _device_of(array)
+        self._state = "live"
+        registry.on_create(self.device, self.nbytes, resident=True)
+
+    @classmethod
+    def put(cls, value, device=None, dtype=None, access: str = "rw") -> "DeviceRef":
+        """Transfer a host value to ``device`` and wrap it (the paper's
+        first-actor-in-the-chain input transfer, made explicit)."""
+        arr = jax.device_put(np.asarray(value, dtype=dtype), device)
+        return cls(arr, access=access)
 
     # -- properties ---------------------------------------------------------
     @property
@@ -63,41 +241,158 @@ class DeviceRef:
         return int(np.dtype(self.dtype).itemsize * np.prod(self.shape, dtype=np.int64))
 
     @property
+    def readable(self) -> bool:
+        return "r" in self.access
+
+    @property
+    def writable(self) -> bool:
+        return "w" in self.access
+
+    @property
+    def is_spilled(self) -> bool:
+        return self._state == "spilled"
+
+    def _check_usable(self) -> None:
+        if self._state == "released":
+            raise RuntimeError("DeviceRef used after release")
+        if self._state == "donated":
+            raise RuntimeError(
+                "DeviceRef used after donation: the buffer was donated to a "
+                "kernel and its ownership transferred (donate-after-use)")
+
+    @property
     def array(self) -> jax.Array:
         """The underlying (possibly still-executing) device array."""
-        if self._released:
-            raise RuntimeError("DeviceRef used after release")
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError(
+                "DeviceRef is spilled to host memory; call unspill() first")
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; reading "
+                "requires 'r'")
         return self._array
 
     @property
     def sharding(self):
-        return self._array.sharding
+        return self.array.sharding
 
     def is_ready(self) -> bool:
         """True once the producing computation has completed on device."""
+        if self._state != "live":
+            return True
         try:
             return bool(self._array.is_ready())
         except AttributeError:  # pragma: no cover - older jax
             return True
 
+    # -- access rights ------------------------------------------------------
+    def restrict(self, access: str) -> "DeviceRef":
+        """A narrowed-rights view of the same device buffer (paper §3.5).
+
+        Rights may only shrink (``rw`` → ``r``); widening raises
+        :class:`AccessViolation`. The view is an independent ref — release
+        it like any other (accounting counts its bytes separately).
+        """
+        if access not in _ACCESS_MODES:
+            raise ValueError("access must be 'r', 'w' or 'rw'")
+        if not set(access) <= set(self.access):
+            raise AccessViolation(
+                f"cannot widen access rights {self.access!r} -> {access!r}")
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError("cannot derive a view of a spilled DeviceRef")
+        return DeviceRef(self._array, access=access)
+
     # -- data movement ------------------------------------------------------
     def to_value(self) -> np.ndarray:
-        """Explicit device→host copy (the paper's read-back at pipeline end)."""
-        return np.asarray(jax.device_get(self.array))
+        """Explicit device→host copy (the paper's read-back at pipeline end).
+
+        Counted in :func:`transfer_count` — the zero-copy pipeline tests
+        assert this stays flat across stage hops.
+        """
+        self._check_usable()
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; to_value() "
+                "requires 'r'")
+        if self._state == "spilled":
+            return np.array(self._host)
+        registry.count_transfer()
+        return np.asarray(jax.device_get(self._array))
 
     def block_until_ready(self) -> "DeviceRef":
         self.array.block_until_ready()
         return self
 
+    # -- spill / unspill (paper §3.5 distribution option (b)) ----------------
+    def spill(self) -> "DeviceRef":
+        """Serialize to host memory and drop the device buffer.
+
+        This is the *explicit* stage boundary for distribution: a spilled
+        ref pickles (see ``__reduce__``) and stops counting against the
+        device's live bytes. Inverse of :meth:`unspill`. Requires read
+        rights — spilling serializes the contents, so a write-only view
+        must not be able to exfiltrate data its rights forbid reading.
+        """
+        self._check_usable()
+        if self._state == "spilled":
+            return self
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; spill() "
+                "serializes the contents and requires 'r'")
+        self._host = np.asarray(jax.device_get(self._array))
+        self._array = None
+        self._state = "spilled"
+        registry.count_spill()
+        registry.on_evict(self.device, self.nbytes)
+        return self
+
+    def unspill(self, device=None) -> "DeviceRef":
+        """Move a spilled payload back onto ``device`` (default: where it
+        lived before, or the process default device)."""
+        if self._state != "spilled":
+            self._check_usable()
+            return self
+        self._array = jax.device_put(self._host, device or self.device)
+        self._host = None
+        self.device = _device_of(self._array)
+        self._state = "live"
+        registry.count_unspill()
+        registry.on_resident(self.device, self.nbytes)
+        return self
+
+    # -- consumption ------------------------------------------------------
+    def donate(self) -> jax.Array:
+        """Consume the ref for buffer donation: returns the array and marks
+        the ref dead so XLA may reuse the buffer in place (the TPU analogue
+        of handing a read-write ``cl_mem`` to a kernel). Requires write
+        rights; any later use raises a donate-after-use error."""
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError(
+                "cannot donate a spilled DeviceRef; unspill() first")
+        if not self.writable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; donation "
+                "requires 'w'")
+        arr = self._array
+        self._array = None
+        self._state = "donated"
+        registry.on_retire(self.device, self.nbytes, resident=True)
+        return arr
+
     def release(self) -> None:
-        """Drop the device buffer (paper: "dropping a reference argument
-        simply releases its memory on the device")."""
-        if not self._released:
-            self._released = True
-            self._array = None
-            global _live
-            with _live_lock:
-                _live -= 1
+        """Drop the buffer (paper: "dropping a reference argument simply
+        releases its memory on the device"). Idempotent."""
+        if self._state in ("released", "donated"):
+            return
+        resident = self._state == "live"
+        registry.on_retire(self.device, self.nbytes, resident=resident)
+        self._array = None
+        self._host = None
+        self._state = "released"
 
     def __del__(self):  # pragma: no cover - GC timing dependent
         try:
@@ -107,16 +402,39 @@ class DeviceRef:
 
     # -- distribution policy -------------------------------------------------
     def __reduce__(self):
-        # Paper §3.5 option (a): prohibit serialization of reference types so
-        # sending one over the network raises instead of silently copying.
+        # Paper §3.5: option (a) — a device-resident ref refuses to
+        # serialize, so sending one over the network raises instead of
+        # silently copying; option (b) — after an *explicit* spill() the
+        # host payload travels and unspill() restores device residency on
+        # the receiving node.
+        if self._state == "spilled":
+            return (_rebuild_spilled,
+                    (self._host, np.dtype(self.dtype).str, self.shape,
+                     self.access))
         raise TypeError(
             "DeviceRef is bound to local device memory and cannot be "
-            "serialized; call .to_value() for an explicit host copy"
-        )
+            "serialized; call .spill() for explicit host serialization or "
+            ".to_value() for an explicit host copy")
 
     def __repr__(self):
-        state = "released" if self._released else ("ready" if self.is_ready() else "pending")
-        return f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}[{self.access}, {state}]"
+        state = self._state if self._state != "live" else (
+            "ready" if self.is_ready() else "pending")
+        return (f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}"
+                f"[{self.access}, {state}]")
+
+
+def _rebuild_spilled(host, dtype_str, shape, access) -> DeviceRef:
+    """Unpickle target: reconstruct a spilled ref (host payload only)."""
+    ref = DeviceRef.__new__(DeviceRef)
+    ref._array = None
+    ref._host = np.asarray(host)
+    ref.dtype = np.dtype(dtype_str)
+    ref.shape = tuple(shape)
+    ref.access = access
+    ref.device = None
+    ref._state = "spilled"
+    registry.on_create(None, ref.nbytes, resident=False)
+    return ref
 
 
 def as_device_array(value, device=None, dtype=None) -> jax.Array:

@@ -32,6 +32,7 @@ from concurrent.futures import Future
 from typing import Any, Callable, List, Optional, Sequence
 
 from .actor import ActorRef
+from .memref import payload_device
 
 __all__ = ["split_offload", "ChunkScheduler", "WorkItem"]
 
@@ -76,13 +77,35 @@ class WorkItem:
 
 
 class ChunkScheduler:
-    """Pull-based chunk dispatch with speculative re-issue of stragglers."""
+    """Pull-based chunk dispatch with speculative re-issue of stragglers.
+
+    Dispatch is **placement-aware** when worker placements are known (an
+    :class:`~repro.core.api.ActorPool` provides them, or pass ``devices=``):
+    a chunk whose payload carries a :class:`~repro.core.memref.DeviceRef`
+    already resident on worker W's device is preferentially handed to W,
+    so chunked ref pipelines dispatch zero-copy. (Affinity is a preference,
+    not a pin — a worker with no matching chunk falls back to FIFO so
+    placement can never starve it.) Refs in chunk payloads must not be
+    *donated* by the kernel: a speculative re-issue would replay a
+    consumed ref.
+    """
 
     def __init__(self, workers, *,
                  straggler_factor: float = 3.0, max_attempts: int = 3,
-                 drain_grace: float = 10.0):
-        if hasattr(workers, "workers"):  # ActorPool (repro.core.api)
+                 drain_grace: float = 10.0, devices=None):
+        placements: dict = {}
+        if hasattr(workers, "placements"):  # ActorPool (repro.core.api)
+            placements.update(workers.placements)
+        if hasattr(workers, "workers"):
             workers = workers.workers
+        workers = list(workers)
+        if devices is not None:
+            if isinstance(devices, dict):
+                placements.update(devices)
+            else:
+                placements.update(
+                    {w.actor_id: d for w, d in zip(workers, devices)})
+        self._placements = placements
         self._workers: list[ActorRef] = list(workers)
         self.straggler_factor = straggler_factor
         self.max_attempts = max_attempts
@@ -110,6 +133,26 @@ class ChunkScheduler:
     @property
     def workers(self) -> list[ActorRef]:
         return list(self._workers)
+
+    # -- placement ------------------------------------------------------
+    def _take_pending(self, pending: list, worker: ActorRef) -> "WorkItem":
+        """Placement-aware pop: prefer a chunk whose DeviceRef payload is
+        already resident on ``worker``'s device (zero-copy dispatch), then
+        a chunk with no device affinity, else plain FIFO."""
+        dev = self._placements.get(worker.actor_id)
+        jd = getattr(dev, "jax_device", None) if dev is not None else None
+        if jd is None and not self._placements:
+            return pending.pop(0)
+        neutral = None
+        for i, item in enumerate(pending):
+            pd = payload_device(item.payload)
+            if pd is None:
+                if neutral is None:
+                    neutral = i
+                continue
+            if jd is not None and pd == jd:
+                return pending.pop(i)
+        return pending.pop(neutral if neutral is not None else 0)
 
     # -- execution ------------------------------------------------------
     def run(self, payloads: Sequence[tuple],
@@ -178,8 +221,9 @@ class ChunkScheduler:
                     w = idle.pop()
                     if not w.is_alive():
                         continue
-                    item = pending.pop(0)
+                    item = self._take_pending(pending, w)
                     if item.done:
+                        idle.append(w)  # keep the worker available
                         continue
                     outstanding[item.index] = item
                     issue(w, item, speculative=False)

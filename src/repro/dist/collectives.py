@@ -5,6 +5,12 @@ shard's contribution to int8 with a per-shard absmax scale cuts the wire
 bytes 4x at <1% relative error, and carrying the quantization residual
 into the next step (error feedback, 1-bit-Adam-style) makes the *time
 average* unbiased so training quality is preserved.
+
+The ref-plane entry points (:func:`quantize_ref` / :func:`dequantize_ref`)
+operate on :class:`~repro.core.memref.DeviceRef`\\ s at the host boundary:
+the compressed payload stays device-resident as an int8 ref, and spilling
+*that* ref at an explicit stage boundary (paper §3.5 option (b)) ships 4x
+fewer bytes over the wire than spilling the float original.
 """
 from __future__ import annotations
 
@@ -12,8 +18,10 @@ import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401  — installs the jax.shard_map compat alias
+from repro.core.memref import DeviceRef, as_device_array
 
-__all__ = ["compressed_psum", "tree_psum_with_error_feedback"]
+__all__ = ["compressed_psum", "tree_psum_with_error_feedback",
+           "quantize_ref", "dequantize_ref"]
 
 
 def _quantize(x):
@@ -23,6 +31,31 @@ def _quantize(x):
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale, q.astype(jnp.float32) * scale
+
+
+# payload+scale only: jitting the full _quantize would materialize (and
+# discard) the float32 dequantized copy on every call
+_quantize_wire = jax.jit(lambda x: _quantize(x)[:2])
+
+
+def quantize_ref(x) -> tuple:
+    """Compress an array or :class:`DeviceRef` to its int8 wire format.
+
+    → ``(DeviceRef[int8], float scale)``. The payload never leaves the
+    device; combined with ``DeviceRef.spill()`` this is the compressed
+    host-serialization boundary (4x fewer wire bytes than the original).
+    The input ref is *not* consumed.
+    """
+    q, scale = _quantize_wire(as_device_array(x))
+    return DeviceRef(q), float(scale)
+
+
+def dequantize_ref(q, scale: float, dtype=jnp.float32) -> DeviceRef:
+    """Inverse of :func:`quantize_ref`: expand an int8 payload (array or
+    ref) back to a ``dtype`` ref on device. Relative error ≤ 1/254."""
+    arr = as_device_array(q)
+    deq = (arr.astype(jnp.float32) * jnp.float32(scale)).astype(dtype)
+    return DeviceRef(deq)
 
 
 def compressed_psum(x, axis_name: str):

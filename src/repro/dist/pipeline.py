@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import ActorRef, ActorSystem
 from repro.core.api import Pipeline
+from repro.core.memref import DeviceRef, as_device_array
 from repro.models.layers import apply_norm
 from repro.models.transformer import embed_inputs, layer_groups, _apply_unit
 
@@ -89,15 +90,24 @@ def make_layer_stage_actors(system: ActorSystem, model, params,
     stages, lo = [], 0
     for si, sz in enumerate(sizes):
         chunk = units[lo:lo + sz]
+        last = si == n_stages - 1
         lo += sz
         fn = _stage_fn(model, [u for u, _ in chunk],
-                       first=(si == 0), last=(si == n_stages - 1),
+                       first=(si == 0), last=last,
                        embed=params["embed"],
                        final_norm=params["final_norm"], head=head)
         jitted = jax.jit(fn)
         chunk_params = [p for _, p in chunk]
-        stages.append(system.spawn(
-            lambda x, _f=jitted, _p=chunk_params: _f(_p, x)))
+
+        # stages speak DeviceRef natively: inputs are unwrapped (host
+        # microbatches are transferred once, by the first stage) and the
+        # [B, S, D] activation crosses actor boundaries as a ref — the
+        # composed chain releases it once the next stage has consumed it
+        def _stage(x, _f=jitted, _p=chunk_params, _last=last):
+            y = _f(_p, as_device_array(x))
+            return y if _last else DeviceRef(y)
+
+        stages.append(system.spawn(_stage))
     return stages
 
 
@@ -117,7 +127,22 @@ class PipelineRunner:
         self._chain = Pipeline(system, mode="staged").stages(stages).build()
 
     def run(self, microbatches: Sequence[Any],
-            timeout: Optional[float] = 300.0) -> list:
+            timeout: Optional[float] = 300.0, emit: str = "value") -> list:
+        """Stream the microbatches; returns results in submission order.
+
+        Microbatches may be host arrays **or** :class:`DeviceRef`\\ s (the
+        first stage unwraps refs, so data already on device never bounces
+        through the host). ``emit`` selects the result representation:
+
+        * ``"value"`` — whatever the last stage produced (default);
+        * ``"ref"``   — wrap each result as a :class:`DeviceRef`, the
+          stay-on-device handoff to a downstream consumer;
+        * ``"spill"`` — wrap **and spill**: the explicit host-serialization
+          stage boundary (paper §3.5 option (b)) for cross-node transport —
+          spilled refs pickle.
+        """
+        if emit not in ("value", "ref", "spill"):
+            raise ValueError(f"emit must be value|ref|spill, got {emit!r}")
         sem = threading.Semaphore(self.depth)
         results: list = [None] * len(microbatches)
         first_error: list = [None]
@@ -136,7 +161,14 @@ class PipelineRunner:
                     if first_error[0] is None:
                         first_error[0] = exc
                 else:
-                    results[i] = f.result()
+                    res = f.result()
+                    if emit != "value":
+                        ref = (res if isinstance(res, DeviceRef)
+                               else DeviceRef(jnp.asarray(res)))
+                        if emit == "spill":
+                            ref.spill()
+                        res = ref
+                    results[i] = res
                 sem.release()
 
             fut.add_done_callback(_done)

@@ -224,6 +224,45 @@ def test_pool_least_loaded_routes_around_slow_worker(system):
     assert counts["fast"] > counts["slow"], counts
 
 
+def test_pool_outstanding_consistent_under_hammer(system):
+    """Regression for the _pick/outstanding race: 8 threads hammering a
+    4-worker pool must never lose or double-count an outstanding slot —
+    the decrement runs in the done-callback under the pool lock."""
+    pool = ActorPool(system, [system.spawn(lambda x: x + 1)
+                              for _ in range(4)], policy="least_loaded")
+    errors = []
+
+    def hammer():
+        try:
+            for i in range(50):
+                assert pool.ask(i, timeout=30) == i + 1
+        except Exception as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        counts = [pool.outstanding(w) for w in pool.workers]
+        if all(c == 0 for c in counts):
+            break
+        time.sleep(0.01)
+    assert all(c == 0 for c in counts), counts
+
+
+def test_v1_compose_fuse_emit_deprecation_warning(system):
+    a = system.spawn(add_one)
+    d = system.spawn(double)
+    with pytest.warns(DeprecationWarning, match="compose"):
+        compose(system, a, d)
+    with pytest.warns(DeprecationWarning, match="fuse"):
+        fuse(system, a, d, name="dep")
+
+
 def test_pool_survives_dead_worker(system):
     def bad(x):
         raise RuntimeError("boom")

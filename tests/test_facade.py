@@ -211,6 +211,30 @@ def test_chunk_scheduler_straggler_and_failure(mngr, system):
     assert sched.stats["failed"] >= 1
 
 
+def test_chunk_scheduler_speculative_reissue_beats_straggler(system):
+    """A deliberately slow straggler must lose to the speculatively
+    re-issued copy, and the chunk's result must appear exactly once."""
+    def slow(x):
+        time.sleep(1.0)          # the straggler: ~1000x the median
+        return ("slow", x + 1)
+
+    def fast(x):
+        time.sleep(0.001)
+        return ("fast", x + 1)
+
+    ws, wf = system.spawn(slow), system.spawn(fast)
+    sched = ChunkScheduler([ws, wf], straggler_factor=3.0, drain_grace=3.0)
+    res = sched.run([(i,) for i in range(8)], timeout=60)
+    # every chunk present exactly once, in order, with the right value —
+    # the straggler's late duplicate completion must not double-record
+    assert [v for _, v in res] == [i + 1 for i in range(8)]
+    # the chunk the slow worker grabbed was re-issued and won by the fast
+    # worker; the slow worker contributes no result
+    assert all(tag == "fast" for tag, _ in res), res
+    assert sched.stats["speculative"] >= 1
+    assert sched.stats["dispatched"] >= 9    # 8 fresh + >=1 speculative
+
+
 def test_chunk_scheduler_elastic_add_remove(mngr):
     w1 = mngr.spawn(lambda x: x, "e1", NDRange(dim_vec(2)),
                     In(jnp.float32), Out(jnp.float32))
