@@ -1,0 +1,115 @@
+"""Serve-engine latency percentiles vs offered load (ISSUE 3).
+
+Open-loop clients submit at a fixed request rate against the
+continuous-batching :class:`~repro.serve.ServeEngine` (toy decode step, so
+the numbers measure the *runtime*: batching, queueing, actor dispatch —
+not model FLOPs). For each offered load we report p50/p95/p99 end-to-end
+latency and the achieved throughput; the sweep is written to
+``BENCH_PR3.json`` at the repo root so PR-over-PR serve-latency
+trajectories are diffable.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+from .common import emit
+
+_STEPS = 4            # tokens per request
+_REQUESTS = 96        # per load level
+_LOADS_RPS = (50, 200, 800)
+_ROWS: list = []
+
+
+def _toy_engine(system):
+    import jax.numpy as jnp
+
+    from repro.serve import ServeEngine
+
+    def step(cache, tokens):
+        nxt = (cache[:, 0] * 1000 + cache[:, 1]).astype(jnp.int32)
+        return nxt, cache.at[:, 1].add(1)
+
+    def init(prompt):
+        return jnp.asarray([int(prompt), 0], jnp.int32), 0
+
+    return ServeEngine(system, step, init, n_workers=2, max_batch=8,
+                       max_wait_ms=2.0)
+
+
+def _offered_load(system, rate_rps: float) -> dict:
+    engine = _toy_engine(system)
+    interval = 1.0 / rate_rps
+    futures = []
+    t0 = time.perf_counter()
+    with engine:
+        next_at = time.perf_counter()
+        for seed in range(_REQUESTS):
+            lag = next_at - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            futures.append(engine.submit(seed, max_new_tokens=_STEPS))
+            next_at += interval
+        for f in futures:
+            f.result(timeout=300)
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    lat = stats["latency"]
+    return {
+        "offered_rps": rate_rps,
+        "achieved_rps": round(_REQUESTS / wall, 1),
+        "p50_ms": round(lat["p50_ms"], 2),
+        "p95_ms": round(lat["p95_ms"], 2),
+        "p99_ms": round(lat["p99_ms"], 2),
+        "engine_steps": stats["steps"],
+        "peak_batch": stats["peak_batch"],
+        "requeues": stats["requeues"],
+        "shed": stats["shed"],
+    }
+
+
+def run() -> None:
+    from repro.core import ActorSystem
+
+    with ActorSystem(name="bench-serve", max_workers=8) as system:
+        # warm the jit caches so the sweep measures steady-state latency
+        warm = _toy_engine(system)
+        with warm:
+            for f in [warm.submit(s, max_new_tokens=2) for s in range(16)]:
+                f.result(timeout=300)
+        for rate in _LOADS_RPS:
+            row = _offered_load(system, rate)
+            _ROWS.append(row)
+            emit(f"serve_p99@{rate}rps", row["p99_ms"] * 1e3,
+                 f"p50={row['p50_ms']}ms achieved={row['achieved_rps']}rps")
+    _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import jax
+
+    from repro.core import memory_stats
+
+    snap = {
+        "pr": 3,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "workload": {"requests_per_load": _REQUESTS,
+                     "tokens_per_request": _STEPS,
+                     "max_batch": 8, "workers": 2},
+        "loads": _ROWS,
+        "memref": memory_stats(),
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR3.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -24,12 +24,14 @@ The v1 positional surface (``mngr.spawn(fn, name, nd_range, *specs)``,
 from .actor import Actor, ActorRef, ActorSystem, Message
 from .api import ActorPool, KernelDecl, Pipeline, kernel
 from .compose import ComposedActor, compose, fuse
-from .errors import (AccessViolation, ActorError, ActorFailed, DownMessage,
-                     ExitMessage, MailboxClosed, SignatureMismatch)
+from .errors import (AccessViolation, ActorError, ActorFailed,
+                     DeadlineExceeded, DownMessage, ExitMessage,
+                     MailboxClosed, SignatureMismatch)
 from .facade import KernelActor
 from .manager import Device, DeviceManager, Platform, Program
 from .memref import (DeviceRef, RefRegistry, as_device_array, live_ref_count,
-                     memory_stats, reset_transfer_stats, transfer_count)
+                     memory_stats, reset_transfer_stats, transfer_count,
+                     tree_release, tree_unwrap, tree_wrap)
 from .scheduler import ChunkScheduler, split_offload
 from .signature import In, InOut, KernelSignature, Local, NDRange, Out, Priv, dim_vec
 
@@ -37,12 +39,13 @@ __all__ = [
     "Actor", "ActorRef", "ActorSystem", "Message",
     "ActorPool", "KernelDecl", "Pipeline", "kernel",
     "ComposedActor", "compose", "fuse",
-    "AccessViolation", "ActorError", "ActorFailed", "DownMessage",
-    "ExitMessage", "MailboxClosed", "SignatureMismatch",
+    "AccessViolation", "ActorError", "ActorFailed", "DeadlineExceeded",
+    "DownMessage", "ExitMessage", "MailboxClosed", "SignatureMismatch",
     "KernelActor",
     "Device", "DeviceManager", "Platform", "Program",
     "DeviceRef", "RefRegistry", "as_device_array", "live_ref_count",
     "memory_stats", "reset_transfer_stats", "transfer_count",
+    "tree_release", "tree_unwrap", "tree_wrap",
     "ChunkScheduler", "split_offload",
     "In", "InOut", "KernelSignature", "Local", "NDRange", "Out", "Priv", "dim_vec",
 ]

@@ -424,11 +424,15 @@ class ActorPool:
             return self._outstanding.get(ref.actor_id, 0)
 
     # -- routing ------------------------------------------------------
-    def _pick(self, payload: tuple = ()) -> ActorRef:
+    def _pick(self, payload: tuple = (), exclude=frozenset()) -> ActorRef:
         # caller must hold self._lock (routing state: _rr, _outstanding)
         live = [w for w in self._workers if w.is_alive()]
         if not live:
             raise RuntimeError("no live workers in pool")
+        if exclude:
+            kept = [w for w in live if w.actor_id not in exclude]
+            if kept:  # exclusion is a preference: never strand a payload
+                live = kept
         pref = payload_device(payload)
         if pref is not None:
             local = [w for w in live
@@ -452,9 +456,21 @@ class ActorPool:
             w = self._pick(payload)
         w.send(*payload)
 
-    def request(self, *payload: Any) -> Future:
+    def submit(self, *payload: Any, exclude: Sequence[ActorRef] = ()
+               ) -> Future:
+        """Asynchronous submit: route the payload, bump the chosen worker's
+        outstanding count, and return the reply future with ``.worker`` set
+        to the chosen ref. Callers that track misbehaving-but-alive
+        replicas (slow, suspected-bad) steer retries away from them via
+        ``exclude``; note the serve engine's own retry path runs through
+        :class:`~repro.core.scheduler.ChunkScheduler` instead, where a
+        *crashed* replica is excluded implicitly by being dead. Exclusion
+        is a preference, not a pin: if every live worker is excluded it is
+        ignored rather than stranding the payload.
+        """
+        excluded = {getattr(w, "actor_id", w) for w in exclude}
         with self._lock:
-            w = self._pick(payload)
+            w = self._pick(payload, excluded)
             aid = w.actor_id
             self._outstanding[aid] = self._outstanding.get(aid, 0) + 1
         fut = w.request(*payload)
@@ -467,18 +483,25 @@ class ActorPool:
                 self._outstanding[aid] = self._outstanding.get(aid, 0) - 1
 
         fut.add_done_callback(_done)
+        fut.worker = w
         return fut
+
+    def request(self, *payload: Any) -> Future:
+        return self.submit(*payload)
 
     def ask(self, *payload: Any, timeout: Optional[float] = 120.0) -> Any:
         return self.request(*payload).result(timeout=timeout)
 
     def map(self, payloads: Sequence[tuple], *,
-            timeout: Optional[float] = 300.0, **scheduler_kwargs) -> list:
+            timeout: Optional[float] = 300.0, deadlines=None,
+            **scheduler_kwargs) -> list:
         """Run every payload on some worker via :class:`ChunkScheduler`
-        (pull-based balancing + straggler re-issue)."""
+        (pull-based balancing + straggler re-issue); ``deadlines`` (one
+        absolute ``time.monotonic`` value or None per payload) turns on
+        the scheduler's earliest-deadline-first pick."""
         from .scheduler import ChunkScheduler
         return ChunkScheduler(self, **scheduler_kwargs).run(
-            payloads, timeout=timeout)
+            payloads, timeout=timeout, deadlines=deadlines)
 
     def __repr__(self):
         return (f"ActorPool({len(self._workers)} workers, "

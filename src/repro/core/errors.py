@@ -31,6 +31,11 @@ class AccessViolation(ActorError):
     "a reference type includes ... memory access rights")."""
 
 
+class DeadlineExceeded(ActorError):
+    """A deadline-carrying request or chunk missed its deadline before (or
+    while) being served; the serve engine surfaces this per request."""
+
+
 @dataclasses.dataclass(frozen=True)
 class DownMessage:
     """Sent to monitors when a watched actor terminates (paper §2.1)."""

@@ -47,6 +47,9 @@ __all__ = [
     "reset_transfer_stats",
     "memory_stats",
     "payload_device",
+    "tree_wrap",
+    "tree_unwrap",
+    "tree_release",
 ]
 
 _ACCESS_MODES = ("r", "w", "rw")
@@ -435,6 +438,50 @@ def _rebuild_spilled(host, dtype_str, shape, access) -> DeviceRef:
     ref._state = "spilled"
     registry.on_create(None, ref.nbytes, resident=False)
     return ref
+
+
+# ----------------------------------------------------------------------------
+# pytree helpers — per-request cache refs (serve engine)
+# ----------------------------------------------------------------------------
+def tree_wrap(tree, device=None, access: str = "rw"):
+    """Wrap every array leaf of a pytree as a :class:`DeviceRef`.
+
+    This is how the serve engine represents per-request decode state: a
+    model cache pytree becomes a pytree of refs, each leaf accounted in the
+    registry and kept device-resident between decode steps. Leaves that are
+    already refs pass through unchanged; host values are transferred to
+    ``device`` first.
+    """
+
+    # accept the runtime's Device wrapper as well as a bare jax.Device
+    device = getattr(device, "jax_device", device)
+
+    def wrap(leaf):
+        if isinstance(leaf, DeviceRef):
+            return leaf
+        return DeviceRef(as_device_array(leaf, device=device), access=access)
+
+    return jax.tree.map(wrap, tree)
+
+
+def tree_unwrap(tree):
+    """The inverse view: every :class:`DeviceRef` leaf replaced by its
+    (possibly still-executing) device array; non-ref leaves pass through."""
+    return jax.tree.map(
+        lambda l: l.array if isinstance(l, DeviceRef) else l, tree,
+        is_leaf=lambda l: isinstance(l, DeviceRef))
+
+
+def tree_release(tree) -> int:
+    """Release every ref leaf in ``tree`` (idempotent); returns how many
+    refs were visited — the serve engine drops a request's whole cache with
+    one call when the request leaves the batch."""
+    n = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=lambda l: isinstance(l, DeviceRef)):
+        if isinstance(leaf, DeviceRef):
+            leaf.release()
+            n += 1
+    return n
 
 
 def as_device_array(value, device=None, dtype=None) -> jax.Array:

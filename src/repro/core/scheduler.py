@@ -32,6 +32,7 @@ from concurrent.futures import Future
 from typing import Any, Callable, List, Optional, Sequence
 
 from .actor import ActorRef
+from .errors import DeadlineExceeded
 from .memref import payload_device
 
 __all__ = ["split_offload", "ChunkScheduler", "WorkItem"]
@@ -65,15 +66,20 @@ def split_offload(workers: Sequence[ActorRef],
 
 
 class WorkItem:
-    __slots__ = ("index", "payload", "result", "done", "attempts", "issued_at")
+    __slots__ = ("index", "payload", "result", "done", "attempts",
+                 "issued_at", "deadline")
 
-    def __init__(self, index: int, payload: tuple):
+    def __init__(self, index: int, payload: tuple,
+                 deadline: Optional[float] = None):
         self.index = index
         self.payload = payload
         self.result: Any = None
         self.done = False
         self.attempts = 0
         self.issued_at: float = 0.0
+        #: absolute time.monotonic() value; an undispatched chunk whose
+        #: deadline has passed is shed (DeadlineExceeded) instead of issued
+        self.deadline = deadline
 
 
 class ChunkScheduler:
@@ -119,7 +125,8 @@ class ChunkScheduler:
         # which already holds this lock
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
-        self.stats = {"dispatched": 0, "speculative": 0, "failed": 0}
+        self.stats = {"dispatched": 0, "speculative": 0, "failed": 0,
+                      "expired": 0}
 
     # -- elastic worker pool -------------------------------------------------
     def add_worker(self, w: ActorRef) -> None:
@@ -136,29 +143,54 @@ class ChunkScheduler:
 
     # -- placement ------------------------------------------------------
     def _take_pending(self, pending: list, worker: ActorRef) -> "WorkItem":
-        """Placement-aware pop: prefer a chunk whose DeviceRef payload is
-        already resident on ``worker``'s device (zero-copy dispatch), then
-        a chunk with no device affinity, else plain FIFO."""
+        """Placement- and deadline-aware pop.
+
+        Candidate set first (zero-copy preference unchanged): chunks whose
+        DeviceRef payload is already resident on ``worker``'s device, then
+        chunks with no device affinity, else everything. Within the
+        candidate set the pick is earliest-deadline-first (chunks without
+        a deadline sort last), falling back to FIFO on ties — so an
+        SLO-bound serve batch jumps the queue without ever stealing a
+        resident chunk from its device."""
+
+        def edf(indices) -> "WorkItem":
+            best = min(indices, key=lambda i: (
+                pending[i].deadline if pending[i].deadline is not None
+                else float("inf"), i))
+            return pending.pop(best)
+
         dev = self._placements.get(worker.actor_id)
         jd = getattr(dev, "jax_device", None) if dev is not None else None
         if jd is None and not self._placements:
-            return pending.pop(0)
-        neutral = None
+            return edf(range(len(pending)))
+        local, neutral = [], []
         for i, item in enumerate(pending):
             pd = payload_device(item.payload)
             if pd is None:
-                if neutral is None:
-                    neutral = i
-                continue
-            if jd is not None and pd == jd:
-                return pending.pop(i)
-        return pending.pop(neutral if neutral is not None else 0)
+                neutral.append(i)
+            elif jd is not None and pd == jd:
+                local.append(i)
+        if local:
+            return edf(local)
+        if neutral:
+            return edf(neutral)
+        return edf(range(len(pending)))
 
     # -- execution ------------------------------------------------------
     def run(self, payloads: Sequence[tuple],
-            timeout: Optional[float] = 300.0) -> list:
-        """Execute every payload on some worker; returns ordered results."""
-        items = [WorkItem(i, p) for i, p in enumerate(payloads)]
+            timeout: Optional[float] = 300.0,
+            deadlines: Optional[Sequence[Optional[float]]] = None) -> list:
+        """Execute every payload on some worker; returns ordered results.
+
+        ``deadlines`` (one absolute ``time.monotonic`` value or None per
+        payload) makes the pick earliest-deadline-first and sheds chunks
+        whose deadline already passed before dispatch — those surface as
+        :class:`~repro.core.errors.DeadlineExceeded`.
+        """
+        if deadlines is not None and len(deadlines) != len(payloads):
+            raise ValueError("one deadline (or None) per payload")
+        items = [WorkItem(i, p, deadlines[i] if deadlines else None)
+                 for i, p in enumerate(payloads)]
         pending = list(items)            # not yet issued (FIFO)
         outstanding: dict[int, WorkItem] = {}
         remaining = len(items)
@@ -225,6 +257,18 @@ class ChunkScheduler:
                     if item.done:
                         idle.append(w)  # keep the worker available
                         continue
+                    if item.deadline is not None \
+                            and time.monotonic() > item.deadline:
+                        # shed before dispatch: the deadline already passed,
+                        # running it would only waste device time
+                        self.stats["expired"] += 1
+                        item.done = True
+                        item.result = DeadlineExceeded(
+                            f"chunk {item.index} missed its deadline "
+                            "before dispatch")
+                        remaining -= 1
+                        idle.append(w)
+                        continue
                     outstanding[item.index] = item
                     issue(w, item, speculative=False)
                 # speculative re-issue for stragglers
@@ -241,6 +285,14 @@ class ChunkScheduler:
                                 issue(w, item, speculative=True)
                 if remaining == 0:
                     break
+                if pending and not outstanding and inflight == 0 \
+                        and not any(w.is_alive() for w in self._workers):
+                    # every worker died (e.g. a poison chunk killed the
+                    # whole pool): nothing can ever complete — fail fast
+                    # instead of spinning until the timeout
+                    raise RuntimeError(
+                        f"no live workers remain; {len(pending)} chunks "
+                        "undispatchable")
                 wait_for = 0.05
                 if deadline is not None:
                     wait_for = min(wait_for, deadline - time.monotonic())

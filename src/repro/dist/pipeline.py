@@ -14,6 +14,7 @@ composition object covers kernel actors and model stages.
 from __future__ import annotations
 
 import threading
+from concurrent.futures import Future
 from typing import Any, Callable, List, Optional, Sequence
 
 import jax
@@ -117,7 +118,13 @@ def make_layer_stage_actors(system: ActorSystem, model, params,
 class PipelineRunner:
     """Streams microbatches through a stage chain with ≤ ``depth`` in
     flight; results come back in submission order and the first stage
-    failure aborts the run."""
+    failure aborts the run.
+
+    :meth:`submit` is the asynchronous single-microbatch entry point —
+    staged *serving* across layer actors drives it directly (one request's
+    activations per call, concurrent up to ``depth``); :meth:`run` is the
+    batch-mode loop over it.
+    """
 
     def __init__(self, system: ActorSystem, stages: Sequence[ActorRef],
                  depth: int = 2):
@@ -125,14 +132,18 @@ class PipelineRunner:
             raise ValueError("need at least one stage")
         self.depth = depth
         self._chain = Pipeline(system, mode="staged").stages(stages).build()
+        # shared in-flight window: concurrent submit() callers (a serve
+        # engine's request threads) and run() draw from the same budget
+        self._sem = threading.Semaphore(depth)
 
-    def run(self, microbatches: Sequence[Any],
-            timeout: Optional[float] = 300.0, emit: str = "value") -> list:
-        """Stream the microbatches; returns results in submission order.
+    def submit(self, mb: Any, *, emit: str = "value",
+               timeout: Optional[float] = None) -> Future:
+        """Admit one microbatch into the stage chain; returns a future for
+        its result. At most ``depth`` microbatches are in flight — a full
+        window blocks the caller (backpressure) until a slot frees, or
+        raises ``TimeoutError`` after ``timeout`` seconds.
 
-        Microbatches may be host arrays **or** :class:`DeviceRef`\\ s (the
-        first stage unwraps refs, so data already on device never bounces
-        through the host). ``emit`` selects the result representation:
+        ``emit`` selects the result representation:
 
         * ``"value"`` — whatever the last stage produced (default);
         * ``"ref"``   — wrap each result as a :class:`DeviceRef`, the
@@ -143,41 +154,54 @@ class PipelineRunner:
         """
         if emit not in ("value", "ref", "spill"):
             raise ValueError(f"emit must be value|ref|spill, got {emit!r}")
-        sem = threading.Semaphore(self.depth)
+        if not self._sem.acquire(timeout=timeout):
+            raise TimeoutError(
+                f"pipeline in-flight window ({self.depth}) still full "
+                f"after {timeout}s")
+        payload = mb if isinstance(mb, tuple) else (mb,)
+        fut = self._chain.request(*payload)
+        out: Future = Future()
+
+        def _done(f):
+            self._sem.release()
+            exc = f.exception()
+            if exc is not None:
+                out.set_exception(exc)
+                return
+            res = f.result()
+            if emit != "value":
+                ref = (res if isinstance(res, DeviceRef)
+                       else DeviceRef(jnp.asarray(res)))
+                if emit == "spill":
+                    ref.spill()
+                res = ref
+            out.set_result(res)
+
+        fut.add_done_callback(_done)
+        return out
+
+    def run(self, microbatches: Sequence[Any],
+            timeout: Optional[float] = 300.0, emit: str = "value") -> list:
+        """Stream the microbatches; returns results in submission order.
+
+        Microbatches may be host arrays **or** :class:`DeviceRef`\\ s (the
+        first stage unwraps refs, so data already on device never bounces
+        through the host). A thin loop over :meth:`submit`; the first
+        stage failure stops further admissions and aborts the run.
+        """
+        futures: list[Future] = []
+        for mb in microbatches:
+            if any(f.done() and f.exception() is not None for f in futures):
+                break  # a stage already failed: stop admitting
+            futures.append(self.submit(mb, emit=emit, timeout=timeout))
         results: list = [None] * len(microbatches)
-        first_error: list = [None]
-        futures = []
-        for i, mb in enumerate(microbatches):
-            sem.acquire()
-            if first_error[0] is not None:
-                sem.release()
-                break
-            payload = mb if isinstance(mb, tuple) else (mb,)
-            fut = self._chain.request(*payload)
-
-            def _done(f, i=i):
-                exc = f.exception()
-                if exc is not None:
-                    if first_error[0] is None:
-                        first_error[0] = exc
-                else:
-                    res = f.result()
-                    if emit != "value":
-                        ref = (res if isinstance(res, DeviceRef)
-                               else DeviceRef(jnp.asarray(res)))
-                        if emit == "spill":
-                            ref.spill()
-                        res = ref
-                    results[i] = res
-                sem.release()
-
-            fut.add_done_callback(_done)
-            futures.append(fut)
-        for f in futures:
+        first_error: Optional[BaseException] = None
+        for i, f in enumerate(futures):
             try:
-                f.result(timeout)
-            except Exception:
-                pass  # recorded by the callback; first error wins
-        if first_error[0] is not None:
-            raise first_error[0]
+                results[i] = f.result(timeout)
+            except Exception as exc:
+                if first_error is None:
+                    first_error = exc
+        if first_error is not None:
+            raise first_error
         return results

@@ -1,44 +1,122 @@
-"""Serving launcher: batched greedy decode against a resident cache.
+"""Serving launcher: a thin CLI over :class:`repro.serve.ServeEngine`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
-        --batch 8 --steps 64
+        --requests 32 --batch 8 --steps 64
+
+Each request decodes ``--steps`` greedy tokens against its own
+device-resident cache; the engine batches requests (gang-scheduled — the
+model cache carries a batch-uniform decode position, so mid-batch joins
+are disabled) and reports per-request p50/p95/p99 latency plus the
+DeviceRef traffic counters. ``--sync`` keeps the legacy single-process
+loop (also the only path for encoder–decoder models, whose cache needs
+per-request encoder frames).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+__all__ = ["main", "check_cache_capacity"]
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--steps", type=int, default=64)
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args(argv)
 
-    import jax
+def check_cache_capacity(steps: int, capacity: int) -> int:
+    """Guard the decode length against the allocated cache.
+
+    A decode of ``steps`` tokens occupies ``steps + 1`` cache slots (the
+    prompt token plus one per generated token); a longer decode would
+    silently wrap the ring buffer / overwrite live KV entries instead of
+    failing loudly. Returns ``capacity`` so call sites can chain it.
+    """
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    if steps + 1 > capacity:
+        raise ValueError(
+            f"decode of {steps} steps needs {steps + 1} cache slots but "
+            f"only {capacity} were allocated; raise the cache capacity or "
+            "shorten the decode")
+    return capacity
+
+
+def _run_engine(args, cfg, model, params, serve_step) -> int:
     import jax.numpy as jnp
     import numpy as np
-    from repro import configs
-    from repro.dist import step as step_mod
-    from repro.models import Model
+    from repro.core import ActorSystem, memory_stats
+    from repro.serve import ServeEngine
 
-    cfg = (configs.get_config if args.full else configs.get_smoke_config)(
-        args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    serve_step = jax.jit(step_mod.build_serve_step(model), donate_argnums=(1,))
+    capacity = args.steps + 1
+    check_cache_capacity(args.steps, capacity)
 
+    def step_fn(cache, tokens):
+        nxt, _, cache = serve_step(params, cache, tokens[:, None])
+        return nxt[:, 0], cache
+
+    def init_fn(prompt):
+        return model.init_cache(1, capacity), int(prompt)
+
+    # Per-leaf batch axis, detected by diffing abstract cache shapes for
+    # batch sizes 1 and 2 (layer-scanned leaves carry the layer count on
+    # axis 0 and batch on axis 1). Leaves with no batch axis — the scalar
+    # decode position — are batch-uniform and shared, which gang
+    # scheduling keeps aligned.
+    import jax
+    s1 = jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: model.init_cache(1, capacity)))
+    s2 = jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: model.init_cache(2, capacity)))
+    batch_axes = [next((ax for ax, (a, b) in enumerate(zip(x.shape, y.shape))
+                        if a != b), None)
+                  for x, y in zip(s1, s2)]
+
+    def combine(leaves, i):
+        ax = batch_axes[i]
+        return leaves[0] if ax is None else jnp.concatenate(leaves, axis=ax)
+
+    def split(leaf, b, i):
+        ax = batch_axes[i]
+        if ax is None:
+            return leaf
+        return jax.lax.slice_in_dim(leaf, b, b + 1, axis=ax)
+
+    with ActorSystem(name="serve") as system:
+        engine = ServeEngine(system, step_fn, init_fn,
+                             n_workers=args.workers, max_batch=args.batch,
+                             allow_join=False, combine=combine, split=split)
+        t0 = time.perf_counter()
+        with engine:
+            futs = [engine.submit(0, max_new_tokens=args.steps)
+                    for _ in range(args.requests)]
+            results = [f.result(timeout=600) for f in futs]
+        dt = time.perf_counter() - t0
+        stats = engine.stats()
+    lat = stats["latency"]
+    toks = sum(len(r.tokens) for r in results)
+    print(f"{cfg.name}: {args.requests} requests × {args.steps} steps "
+          f"(batch {args.batch}, {args.workers} workers) in {dt:.2f}s "
+          f"({toks / dt:,.0f} tok/s)")
+    print(f"latency p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
+          f"p99={lat['p99_ms']:.1f}ms | engine steps={stats['steps']} "
+          f"requeues={stats['requeues']}")
+    print("memref:", {k: v for k, v in memory_stats().items()
+                      if k in ("transfers", "readbacks", "live_refs")})
+    print("sample:", np.asarray(results[0].tokens)[:16].tolist())
+    return 0
+
+
+def _run_sync(args, cfg, model, params, serve_step) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+
+    capacity = args.steps + 1
+    check_cache_capacity(args.steps, capacity)
     if cfg.family == "encdec":
         rng = np.random.default_rng(0)
         frames = jnp.asarray(rng.standard_normal(
             (args.batch, cfg.encdec.n_frames, cfg.d_model)),
             jnp.dtype(cfg.compute_dtype))
-        cache = model.init_cache(args.batch, args.steps + 1, params=params,
+        cache = model.init_cache(args.batch, capacity, params=params,
                                  frames=frames)
     else:
-        cache = model.init_cache(args.batch, args.steps + 1)
+        cache = model.init_cache(args.batch, capacity)
 
     toks = jnp.zeros((args.batch, 1), jnp.int32)
     outs = []
@@ -51,6 +129,41 @@ def main(argv=None) -> int:
           f"in {dt:.2f}s ({args.steps * args.batch / dt:,.0f} tok/s)")
     print("sample:", np.concatenate(outs, axis=1)[0, :16].tolist())
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="engine mode: how many requests to serve")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="max batch size (sync mode: the static batch)")
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=2,
+                    help="engine mode: decode worker replicas")
+    ap.add_argument("--sync", action="store_true",
+                    help="legacy synchronous loop instead of the engine")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro import configs
+    from repro.dist import step as step_mod
+    from repro.models import Model
+
+    cfg = (configs.get_config if args.full else configs.get_smoke_config)(
+        args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    if args.sync or cfg.family == "encdec":
+        serve_step = jax.jit(step_mod.build_serve_step(model),
+                             donate_argnums=(1,))
+        return _run_sync(args, cfg, model, params, serve_step)
+    # engine mode: the worker jits the batched step itself (and retries
+    # must be able to replay a cache, so no donation here)
+    serve_step = step_mod.build_serve_step(model)
+    return _run_engine(args, cfg, model, params, serve_step)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""``repro.serve`` — asynchronous continuous-batching request engine.
+
+Layered on the actor data plane built in PRs 1–2: requests are admitted
+with deadlines and priorities (:class:`RequestQueue`), formed into
+shape-bucketed dynamic batches (:class:`Batcher`), and decoded
+multi-step by the :class:`ServeEngine`, whose per-request caches stay
+device-resident as :class:`~repro.core.memref.DeviceRef` pytrees between
+steps. See the README's "Serving" section for the engine diagram and the
+SLO/backpressure knobs.
+"""
+from .batcher import Batcher
+from .engine import EngineStopped, ServeEngine, make_decode_worker
+from .request import (AdmissionError, QueueClosed, QueueOverflow, Request,
+                      RequestQueue, ServeResult, SLOExceeded)
+from .stats import EWMA, LatencyStats
+
+__all__ = [
+    "Batcher",
+    "EngineStopped", "ServeEngine", "make_decode_worker",
+    "AdmissionError", "QueueClosed", "QueueOverflow", "Request",
+    "RequestQueue", "ServeResult", "SLOExceeded",
+    "EWMA", "LatencyStats",
+]

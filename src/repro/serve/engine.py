@@ -1,0 +1,414 @@
+"""Continuous-batching serve engine on the actor data plane.
+
+The paper's evaluation argues sub-second duties live or die on offload
+efficiency: keep multi-stage work device-resident while messages arrive
+asynchronously. :class:`ServeEngine` applies that discipline to request
+serving:
+
+* per-request decode state is a pytree of :class:`DeviceRef`\\ s
+  (``repro.core.memref.tree_wrap``) that stays device-resident between
+  decode steps — the demo test asserts ``RefRegistry.transfer_count``
+  stays flat across an entire 32-request run;
+* each decode step is one actor message through an
+  :class:`~repro.core.api.ActorPool` — placement-aware routing hands the
+  batch to a worker whose device already holds the caches;
+* the batch composition changes step to step: finished requests **leave**
+  immediately (their future resolves) and queued requests **join** free
+  slots without stalling the running batch (continuous batching);
+* a failed step is re-queued through the
+  :class:`~repro.core.scheduler.ChunkScheduler` re-issue machinery — the
+  crashed worker is dead to the pool, the retry replays the *unmutated*
+  cache refs on another replica (exactly-once results), and permanent
+  failures surface as per-request errors, never a crashed engine.
+
+Workers never donate or mutate incoming cache refs; the engine releases a
+request's previous-step refs only after the step that superseded them
+succeeded. That invariant is what makes mid-batch worker failure
+recoverable by replay.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actor import ActorSystem
+from repro.core.api import ActorPool
+from repro.core.errors import DeadlineExceeded
+from repro.core.memref import DeviceRef, tree_wrap
+from repro.core.scheduler import ChunkScheduler
+
+from .batcher import Batcher
+from .request import Request, RequestQueue, ServeResult
+from .stats import LatencyStats
+
+__all__ = ["ServeEngine", "make_decode_worker", "EngineStopped"]
+
+
+class EngineStopped(RuntimeError):
+    """Set on requests abandoned by a non-draining shutdown."""
+
+
+# ----------------------------------------------------------------------------
+# decode worker — the actor behavior a pool replica runs
+# ----------------------------------------------------------------------------
+def make_decode_worker(step_fn: Callable, *, combine: Optional[Callable] = None,
+                       split: Optional[Callable] = None,
+                       jit: bool = True) -> Callable:
+    """An actor behavior running one batched decode step.
+
+    ``step_fn(cache, tokens[B]) → (next_tokens[B], new_cache)`` where
+    ``cache`` is any pytree batched on the leading axis. The worker
+    combines the per-request cache leaves (DeviceRefs) on device, runs the
+    jitted step, and splits the updated cache back into per-request
+    DeviceRefs.
+
+    ``combine(leaves, i) → batched leaf`` / ``split(leaf, b, i) → request
+    leaf`` override the default stack/index pair (``i`` is the flattened
+    leaf index) — model caches whose leaves batch on different axes, or
+    carry batch-uniform leaves like a scalar decode position, supply their
+    own pair (see ``repro.launch.serve`` for an axis-detecting example).
+
+    Input refs are **not** donated or mutated: a step that fails on this
+    replica can be replayed verbatim on another (exactly-once results).
+    """
+    fn = jax.jit(step_fn) if jit else step_fn
+    if combine is None:
+        combine = lambda leaves, i: jnp.stack(leaves)
+    if split is None:
+        split = lambda leaf, b, i: leaf[b]
+
+    def decode(tag: str, tokens: tuple, caches: tuple, treedef):
+        if tag != "step":
+            raise ValueError(f"decode worker got unknown message {tag!r}")
+        nreq = len(caches)
+        nleaves = len(caches[0])
+        cols = [combine([caches[b][i].array for b in range(nreq)], i)
+                for i in range(nleaves)]
+        cache = jax.tree_util.tree_unflatten(treedef, cols)
+        new_tokens, new_cache = fn(cache, jnp.asarray(tokens))
+        leaves = jax.tree_util.tree_leaves(new_cache)
+        if len(leaves) != nleaves:
+            raise ValueError("step_fn changed the cache pytree structure")
+        out = tuple(tuple(DeviceRef(split(leaf, b, i))
+                          for i, leaf in enumerate(leaves))
+                    for b in range(nreq))
+        return np.asarray(jax.device_get(new_tokens)), out
+
+    return decode
+
+
+class _Active:
+    """A request resident in the running batch: its queue entry plus the
+    flattened DeviceRef leaves of its device-resident cache."""
+
+    __slots__ = ("req", "leaves", "treedef")
+
+    def __init__(self, req: Request, leaves: List[DeviceRef], treedef):
+        self.req = req
+        self.leaves = leaves
+        self.treedef = treedef
+
+
+# ----------------------------------------------------------------------------
+# the engine
+# ----------------------------------------------------------------------------
+class ServeEngine:
+    """Asynchronous continuous-batching request engine.
+
+    ``init_fn(prompt) → (cache_pytree, first_token)`` builds one request's
+    decode state; ``step_fn(cache, tokens[B]) → (next_tokens[B],
+    new_cache)`` advances a whole batch one token. The engine owns a
+    worker pool (or adopts one via ``pool=``), an admission
+    :class:`RequestQueue`, and a :class:`Batcher`; ``submit()`` is the
+    client surface, ``stats()`` the observability surface.
+
+    ``allow_join=False`` degrades to gang scheduling — a batch runs to
+    completion before the next forms. Models whose cache carries
+    batch-uniform leaves (e.g. a scalar decode position) need this, since
+    a mid-batch joiner would be at a different position.
+    """
+
+    def __init__(self, system: ActorSystem, step_fn: Optional[Callable] = None,
+                 init_fn: Optional[Callable] = None, *,
+                 pool: Optional[ActorPool] = None, n_workers: int = 2,
+                 max_batch: int = 8, max_wait_ms: float = 2.0,
+                 allow_join: bool = True, max_attempts: int = 3,
+                 step_timeout: float = 120.0,
+                 queue: Optional[RequestQueue] = None, device=None,
+                 combine: Optional[Callable] = None,
+                 split: Optional[Callable] = None):
+        if init_fn is None:
+            raise ValueError("init_fn is required (per-request cache setup)")
+        behavior = None
+        if pool is None:
+            if step_fn is None:
+                raise ValueError("need step_fn when no pool is supplied")
+            if device is None:
+                device = system.opencl_manager().find_device()
+            behavior = make_decode_worker(step_fn, combine=combine,
+                                          split=split)
+            workers = [system.spawn(behavior) for _ in range(n_workers)]
+            pool = ActorPool(system, workers, policy="least_loaded",
+                             devices=[device] * len(workers))
+        elif device is None:
+            device = next((d for d in pool.placements.values()
+                           if d is not None), None)
+        #: engine-owned pools self-heal: a crashed replica (any exception
+        #: terminates its actor) is replaced before the next step so
+        #: transient faults never permanently shrink capacity; adopted
+        #: pools (pool=...) are the caller's to manage
+        self._behavior = behavior
+        self._n_workers = n_workers if behavior is not None else 0
+        self.system = system
+        self.pool = pool
+        self.device = device
+        self.init_fn = init_fn
+        self.queue = queue if queue is not None else RequestQueue()
+        self.batcher = Batcher(self.queue, max_batch=max_batch,
+                               max_wait_ms=max_wait_ms)
+        self.max_batch = max_batch
+        self.allow_join = allow_join
+        self.step_timeout = step_timeout
+        self._scheduler = ChunkScheduler(pool, max_attempts=max_attempts)
+        self.latency = LatencyStats()
+        self.ttft = LatencyStats()
+        self._counters: Dict[str, int] = {
+            "steps": 0, "tokens": 0, "joined": 0, "left": 0,
+            "completed": 0, "failed": 0, "expired": 0, "requeues": 0,
+            "respawned": 0, "peak_batch": 0,
+        }
+        self._clock = time.monotonic
+        self._stop = threading.Event()
+        self._drain = True
+        self._thread: Optional[threading.Thread] = None
+
+    # -- client surface ----------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int = 8, priority: int = 0,
+               slo_ms: Optional[float] = None, block: bool = False,
+               timeout: Optional[float] = None) -> Future:
+        """Admit one request; returns a future resolving to a
+        :class:`ServeResult` (or raising the per-request error). Raises an
+        :class:`~repro.serve.request.AdmissionError` when shed."""
+        deadline = None if slo_ms is None else self._clock() + slo_ms / 1e3
+        req = Request(prompt, max_new_tokens=max_new_tokens,
+                      priority=priority, deadline=deadline)
+        self.queue.submit(req, block=block, timeout=timeout)
+        return req.future
+
+    def start(self) -> "ServeEngine":
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-engine", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = 120.0
+             ) -> None:
+        """Close admissions and stop the engine thread. ``drain=True``
+        (default) serves everything already queued first; ``drain=False``
+        fails queued requests with :class:`EngineStopped` (the running
+        batch still finishes — its results are already paid for)."""
+        self.queue.close()
+        self._drain = drain
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
+
+    def stats(self) -> Dict[str, Any]:
+        s: Dict[str, Any] = dict(self._counters)
+        s["shed"] = self.queue.shed
+        s["admitted"] = self.queue.admitted
+        s["queue_depth"] = len(self.queue)
+        s["latency"] = self.latency.summary()
+        s["ttft"] = self.ttft.summary()
+        s["dispatch"] = dict(self._scheduler.stats)
+        return s
+
+    # -- engine loop -------------------------------------------------------
+    def _loop(self) -> None:
+        active: List[_Active] = []
+        try:
+            self._serve(active)
+        except BaseException as exc:  # defensive: never die silently
+            for a in list(active):
+                self._leave(a, active, error=exc)
+            raise
+
+    def _serve(self, active: List[_Active]) -> None:
+        while True:
+            if self._stop.is_set() and not self._drain:
+                self._abandon_queue()
+            free = self.max_batch - len(active)
+            if free > 0 and (self.allow_join or not active):
+                bucket = active[0].req.bucket if active else None
+                if active:
+                    # join path: grab whatever is ready, never stall the
+                    # running batch waiting for company
+                    newcomers = self.batcher.take(free, bucket=bucket,
+                                                  wait_s=0.0, max_wait_s=0.0)
+                else:
+                    newcomers = self.batcher.take(free, wait_s=0.02)
+                for req in newcomers:
+                    self._admit(req, active)
+            if not active:
+                if self._stop.is_set() and len(self.queue) == 0:
+                    return
+                continue  # take() above already waited for work
+            self._expire(active)
+            if active:
+                self._step(active)
+
+    def _abandon_queue(self) -> None:
+        while True:
+            req = self.queue.pop(timeout=0)
+            if req is None:
+                return
+            if not req.future.done():
+                req.future.set_exception(
+                    EngineStopped("engine stopped before serving request"))
+
+    # -- batch membership --------------------------------------------------
+    def _admit(self, req: Request, active: List[_Active]) -> None:
+        now = self._clock()
+        if req.deadline is not None and req.deadline <= now:
+            self._counters["expired"] += 1
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request {req.id} expired while queued"))
+            return
+        try:
+            cache, first_token = self.init_fn(req.prompt)
+            refs = tree_wrap(cache, device=self.device)
+        except Exception as exc:
+            # a bad prompt fails its own request, never the engine
+            self._counters["failed"] += 1
+            if not req.future.done():
+                req.future.set_exception(exc)
+            return
+        leaves, treedef = jax.tree_util.tree_flatten(refs)
+        if active:
+            # the prompt-shape bucket is only a proxy for cache
+            # compatibility; verify the real invariant so one malformed
+            # joiner sheds itself instead of crashing the whole batch in
+            # the worker's tree_unflatten/stack
+            seed = active[0]
+            if treedef != seed.treedef or \
+                    [(l.shape, l.dtype) for l in leaves] != \
+                    [(l.shape, l.dtype) for l in seed.leaves]:
+                for ref in leaves:
+                    ref.release()
+                self._counters["failed"] += 1
+                if not req.future.done():
+                    req.future.set_exception(ValueError(
+                        f"request {req.id}: cache structure does not match "
+                        "the running batch (init_fn inconsistent with the "
+                        "shape bucket)"))
+                return
+        req.last_token = first_token
+        active.append(_Active(req, leaves, treedef))
+        self._counters["joined"] += 1
+        self._counters["peak_batch"] = max(self._counters["peak_batch"],
+                                           len(active))
+
+    def _leave(self, a: _Active, active: List[_Active],
+               error: Optional[BaseException] = None) -> None:
+        for ref in a.leaves:
+            ref.release()
+        a.leaves = []
+        active.remove(a)
+        self._counters["left"] += 1
+        req = a.req
+        if error is not None:
+            self._counters["failed"] += 1
+            if not req.future.done():
+                req.future.set_exception(error)
+            return
+        now = self._clock()
+        lat = now - req.t_submit
+        self.latency.record(lat)
+        self._counters["completed"] += 1
+        ttft = (req.t_first - req.t_submit
+                if req.t_first is not None else lat)
+        if not req.future.done():
+            req.future.set_result(ServeResult(
+                request_id=req.id, tokens=list(req.tokens), latency_s=lat,
+                ttft_s=ttft, steps=len(req.tokens)))
+
+    def _expire(self, active: List[_Active]) -> None:
+        now = self._clock()
+        for a in list(active):
+            if a.req.deadline is not None and now > a.req.deadline:
+                self._counters["expired"] += 1
+                self._leave(a, active, error=DeadlineExceeded(
+                    f"request {a.req.id} missed its deadline mid-decode "
+                    f"after {len(a.req.tokens)} tokens"))
+
+    def _heal_pool(self) -> None:
+        """Replace crashed replicas in an engine-owned pool (no-op for
+        adopted pools). New workers join both the pool and the scheduler's
+        worker set, so the very next step can route to them."""
+        if self._behavior is None:
+            return
+        missing = self._n_workers - len(self.pool.live_workers())
+        for _ in range(missing):
+            ref = self.system.spawn(self._behavior)
+            self.pool.add_worker(ref, self.device)
+            self._scheduler.add_worker(ref)
+            self._counters["respawned"] += 1
+
+    # -- one decode step ---------------------------------------------------
+    def _step(self, active: List[_Active]) -> None:
+        self._heal_pool()
+        payload = ("step",
+                   tuple(a.req.last_token for a in active),
+                   tuple(tuple(a.leaves) for a in active),
+                   active[0].treedef)
+        failed_before = self._scheduler.stats["failed"]
+        t0 = self._clock()
+        try:
+            # one chunk through the ChunkScheduler: its re-issue machinery
+            # retries a failed step on another live worker (the crashed
+            # one is dead to the pool) up to max_attempts
+            result = self._scheduler.run([payload],
+                                         timeout=self.step_timeout)[0]
+        except Exception as exc:
+            # permanent failure: every member surfaces it per-request;
+            # the engine itself keeps serving
+            self._counters["requeues"] += \
+                self._scheduler.stats["failed"] - failed_before
+            for a in list(active):
+                self._leave(a, active, error=exc)
+            return
+        self._counters["requeues"] += \
+            self._scheduler.stats["failed"] - failed_before
+        self.queue.note_service_time(self._clock() - t0)
+        self._counters["steps"] += 1
+        tokens, new_caches = result
+        now = self._clock()
+        for a, tok, new_leaves in zip(list(active), tokens, new_caches):
+            for old in a.leaves:
+                old.release()
+            a.leaves = list(new_leaves)
+            token = tok.item() if hasattr(tok, "item") else tok
+            a.req.tokens.append(token)
+            a.req.last_token = token
+            self._counters["tokens"] += 1
+            if a.req.t_first is None:
+                a.req.t_first = now
+                self.ttft.record(now - a.req.t_submit)
+            if len(a.req.tokens) >= a.req.max_new_tokens:
+                self._leave(a, active)

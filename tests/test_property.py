@@ -93,3 +93,134 @@ def test_full_window_equals_plain_causal(seed):
     b = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
                             causal=True, window=None)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# -- DeviceRef lifecycle state machine (ISSUE 3) -------------------------------
+# Arbitrary interleavings of spill/unspill/donate/restrict/release/to_value
+# against a pure-Python model of the documented state machine: registry
+# bytes/refs never leak, and AccessViolation / donate-after-use surface
+# exactly when specified.
+_LIFECYCLE_OPS = ("spill", "unspill", "donate", "restrict_r", "restrict_rw",
+                  "release", "to_value")
+
+
+def _lifecycle_model_step(state, access, op):
+    """→ (expected_exception_type|None, new_state, bytes_delta, refs_delta,
+    derived_access|None) for one op, mirroring repro.core.memref exactly.
+    Deltas are in units of the ref's nbytes / ref count."""
+    from repro.core import AccessViolation
+    live, spilled, donated, released = "live", "spilled", "donated", "released"
+    usable_err = RuntimeError  # used-after-release / donate-after-use
+    if op == "spill":
+        if state in (donated, released):
+            return usable_err, state, 0, 0, None
+        if state == spilled:
+            return None, spilled, 0, 0, None
+        if "r" not in access:
+            return AccessViolation, state, 0, 0, None
+        return None, spilled, -1, 0, None
+    if op == "unspill":
+        if state == spilled:
+            return None, live, +1, 0, None
+        if state in (donated, released):
+            return usable_err, state, 0, 0, None
+        return None, live, 0, 0, None
+    if op == "donate":
+        if state in (donated, released):
+            return usable_err, state, 0, 0, None
+        if state == spilled:
+            return RuntimeError, state, 0, 0, None
+        if "w" not in access:
+            return AccessViolation, state, 0, 0, None
+        return None, donated, -1, -1, None
+    if op in ("restrict_r", "restrict_rw"):
+        target = "r" if op == "restrict_r" else "rw"
+        if not set(target) <= set(access):   # widen check precedes usable
+            return AccessViolation, state, 0, 0, None
+        if state in (donated, released):
+            return usable_err, state, 0, 0, None
+        if state == spilled:
+            return RuntimeError, state, 0, 0, None
+        return None, state, +1, +1, target   # independent accounted view
+    if op == "release":
+        if state in (donated, released):
+            return None, state, 0, 0, None   # idempotent no-op
+        delta = -1 if state == live else 0   # spilled bytes already evicted
+        return None, released, delta, -1, None
+    if op == "to_value":
+        if state in (donated, released):
+            return usable_err, state, 0, 0, None
+        if "r" not in access:
+            return AccessViolation, state, 0, 0, None
+        return None, state, 0, 0, None
+    raise AssertionError(op)
+
+
+@given(access=st.sampled_from(["r", "w", "rw"]),
+       ops=st.lists(st.sampled_from(_LIFECYCLE_OPS), min_size=0,
+                    max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_deviceref_lifecycle_never_leaks_and_raises_exactly_when_specified(
+        access, ops):
+    import gc
+
+    from repro.core import AccessViolation, DeviceRef
+    from repro.core.memref import registry
+
+    gc.collect()
+    base_refs = registry.live_count()
+    base_bytes = registry.live_bytes()
+
+    ref = DeviceRef(jnp.arange(32, dtype=jnp.float32), access=access)
+    nbytes = ref.nbytes
+    state = "live"
+    derived = []          # restrict() views: independently accounted refs
+    model_bytes = 1       # in units of nbytes
+    model_refs = 1
+
+    for op in ops:
+        expect_exc, state2, d_bytes, d_refs, derived_access = \
+            _lifecycle_model_step(state, access, op)
+        try:
+            if op == "spill":
+                ref.spill()
+            elif op == "unspill":
+                ref.unspill()
+            elif op == "donate":
+                ref.donate()
+            elif op.startswith("restrict"):
+                derived.append(
+                    ref.restrict("r" if op == "restrict_r" else "rw"))
+            elif op == "release":
+                ref.release()
+            elif op == "to_value":
+                ref.to_value()
+            raised = None
+        except Exception as exc:
+            raised = exc
+        if expect_exc is None:
+            assert raised is None, f"{op} in {state!r}: unexpected {raised!r}"
+        else:
+            assert raised is not None, f"{op} in {state!r}: should have raised"
+            assert isinstance(raised, expect_exc), (op, state, raised)
+            if expect_exc is AccessViolation:
+                assert isinstance(raised, AccessViolation)
+            if state == "donated" and op != "release" \
+                    and expect_exc is RuntimeError \
+                    and not isinstance(raised, AccessViolation):
+                assert "donat" in str(raised)  # donate-after-use names itself
+        state = state2
+        model_bytes += d_bytes
+        model_refs += d_refs
+        assert registry.live_bytes() - base_bytes == model_bytes * nbytes, \
+            f"byte accounting diverged after {op} (state {state!r})"
+        assert registry.live_count() - base_refs == model_refs, \
+            f"ref accounting diverged after {op} (state {state!r})"
+
+    # teardown: releasing everything restores the registry exactly
+    ref.release()
+    for d in derived:
+        d.release()
+    gc.collect()
+    assert registry.live_bytes() == base_bytes
+    assert registry.live_count() == base_refs

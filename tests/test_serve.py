@@ -1,0 +1,453 @@
+"""The continuous-batching serve runtime (ISSUE 3 acceptance surface).
+
+Covers: batcher policies (max-wait vs max-batch, shape bucketing),
+join/leave correctness (every admitted request gets exactly its own
+tokens back), a 16-thread client hammer, admission control (backpressure,
+load shedding, SLO budget), fault injection (worker dies mid-batch →
+re-queue on another worker, exactly-once; permanent failures → per-request
+errors), the deadline-aware ChunkScheduler pick, the pool's async submit,
+the PipelineRunner serve path, the launch-CLI cache-capacity guard, and
+the ISSUE 3 demo: 32 requests / max-batch 8 with zero host transfers
+between decode steps.
+"""
+import gc
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ActorPool, ActorSystem, ChunkScheduler,
+                        DeadlineExceeded, live_ref_count, transfer_count)
+from repro.launch.serve import check_cache_capacity
+from repro.serve import (Batcher, QueueOverflow, Request, RequestQueue,
+                         ServeEngine, SLOExceeded, make_decode_worker)
+
+
+@pytest.fixture(scope="module")
+def system():
+    s = ActorSystem(max_workers=8)
+    yield s
+    s.shutdown()
+
+
+# ----------------------------------------------------------------------------
+# toy decode model: cache row = [seed, step]; token = seed*1000 + step
+# ----------------------------------------------------------------------------
+def counter_step(cache, tokens):
+    next_tok = (cache[:, 0] * 1000 + cache[:, 1]).astype(jnp.int32)
+    return next_tok, cache.at[:, 1].add(1)
+
+
+def counter_init(prompt):
+    return jnp.asarray([int(prompt), 0], jnp.int32), 0
+
+
+def expected_tokens(seed, n):
+    return [seed * 1000 + i for i in range(n)]
+
+
+def make_engine(system, **kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_ms", 2.0)
+    return ServeEngine(system, counter_step, counter_init, **kw)
+
+
+# ----------------------------------------------------------------------------
+# batcher policies
+# ----------------------------------------------------------------------------
+def test_batcher_max_batch_returns_without_waiting_window():
+    q = RequestQueue()
+    for s in range(8):
+        q.submit(Request(s, max_new_tokens=1))
+    b = Batcher(q, max_batch=8, max_wait_ms=10_000.0)
+    t0 = time.monotonic()
+    batch = b.take(wait_s=0.0)
+    elapsed = time.monotonic() - t0
+    assert len(batch) == 8
+    assert elapsed < 5.0  # full batch short-circuits the 10s window
+
+
+def test_batcher_max_wait_dispatches_partial_batch():
+    q = RequestQueue()
+    for s in range(3):
+        q.submit(Request(s, max_new_tokens=1))
+    b = Batcher(q, max_batch=8, max_wait_ms=30.0)
+    t0 = time.monotonic()
+    batch = b.take(wait_s=0.0)
+    elapsed = time.monotonic() - t0
+    assert len(batch) == 3          # went with what it had...
+    assert elapsed >= 0.025         # ...but only after the window closed
+    assert len(q) == 0
+
+
+def test_batcher_window_admits_late_arrivals():
+    q = RequestQueue()
+    q.submit(Request(0, max_new_tokens=1))
+    b = Batcher(q, max_batch=4, max_wait_ms=500.0)
+
+    def late():
+        time.sleep(0.05)
+        for s in (1, 2, 3):
+            q.submit(Request(s, max_new_tokens=1))
+
+    t = threading.Thread(target=late)
+    t.start()
+    batch = b.take(wait_s=0.0)
+    t.join()
+    assert [r.prompt for r in batch] == [0, 1, 2, 3]
+
+
+def test_batcher_shape_bucketing():
+    q = RequestQueue()
+    a1 = Request(np.zeros(3), max_new_tokens=1)
+    b1 = Request(np.zeros(5), max_new_tokens=1)
+    a2 = Request(np.ones(3), max_new_tokens=1)
+    for r in (a1, b1, a2):
+        q.submit(r)
+    b = Batcher(q, max_batch=8, max_wait_ms=10.0)
+    first = b.take(wait_s=0.0)
+    assert [r.id for r in first] == [a1.id, a2.id]  # seed's bucket only
+    second = b.take(wait_s=0.0)
+    assert [r.id for r in second] == [b1.id]        # other bucket next
+    assert len(q) == 0
+
+
+def test_batcher_join_path_is_windowless_and_pinned():
+    q = RequestQueue()
+    match = Request(np.zeros(3), max_new_tokens=1)
+    other = Request(np.zeros(5), max_new_tokens=1)
+    q.submit(other)
+    q.submit(match)
+    b = Batcher(q, max_batch=8, max_wait_ms=10_000.0)
+    t0 = time.monotonic()
+    batch = b.take(4, bucket=(3,), wait_s=0.0, max_wait_s=0.0)
+    assert time.monotonic() - t0 < 5.0
+    assert [r.id for r in batch] == [match.id]
+    assert len(q) == 1  # the other bucket stayed queued
+
+
+def test_queue_orders_by_priority_then_deadline():
+    q = RequestQueue()
+    now = time.monotonic()
+    low = Request("a", priority=5)
+    urgent = Request("b", priority=0, deadline=now + 10)
+    more_urgent = Request("c", priority=0, deadline=now + 5)
+    for r in (low, urgent, more_urgent):
+        q.submit(r)
+    assert q.pop(timeout=0).id == more_urgent.id
+    assert q.pop(timeout=0).id == urgent.id
+    assert q.pop(timeout=0).id == low.id
+
+
+# ----------------------------------------------------------------------------
+# admission control: backpressure + load shedding
+# ----------------------------------------------------------------------------
+def test_queue_overflow_sheds_nonblocking():
+    q = RequestQueue(max_depth=2)
+    q.submit(Request(0))
+    q.submit(Request(1))
+    with pytest.raises(QueueOverflow):
+        q.submit(Request(2))
+    assert q.shed == 1
+    assert len(q) == 2
+
+
+def test_queue_backpressure_blocks_until_space():
+    q = RequestQueue(max_depth=1)
+    q.submit(Request(0))
+    admitted = []
+
+    def producer():
+        q.submit(Request(1), block=True, timeout=5.0)
+        admitted.append(True)
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)
+    assert not admitted          # still backpressured
+    assert q.pop(timeout=0) is not None
+    t.join(timeout=5.0)
+    assert admitted and len(q) == 1
+
+
+def test_queue_slo_budget_sheds_when_wait_estimate_blows_budget():
+    q = RequestQueue(slo_budget_s=0.1)
+    q.submit(Request(0))         # no service estimate yet: admitted
+    q.note_service_time(1.0)     # engine observed 1s/step
+    with pytest.raises(SLOExceeded):
+        q.submit(Request(1))     # (depth+1) * 1s >> 0.1s budget
+    assert q.shed == 1
+
+
+def test_queue_sheds_expired_deadline_at_admission():
+    q = RequestQueue()
+    with pytest.raises(SLOExceeded):
+        q.submit(Request(0, deadline=time.monotonic() - 1.0))
+    assert q.shed == 1
+
+
+# ----------------------------------------------------------------------------
+# engine: join/leave correctness
+# ----------------------------------------------------------------------------
+def test_every_request_gets_exactly_its_own_tokens(system):
+    lengths = [3, 1, 4, 2, 5, 1, 3, 2, 4, 1]
+    with make_engine(system, max_batch=3) as eng:
+        futs = [eng.submit(seed, max_new_tokens=n)
+                for seed, n in enumerate(lengths)]
+        results = [f.result(timeout=60) for f in futs]
+    for seed, (n, res) in enumerate(zip(lengths, results)):
+        assert res.tokens == expected_tokens(seed, n), f"request {seed}"
+    s = eng.stats()
+    assert s["completed"] == len(lengths)
+    assert s["joined"] == len(lengths) and s["left"] == len(lengths)
+    assert s["failed"] == 0
+
+
+def test_requests_join_a_running_batch(system):
+    """A long request keeps the batch alive while short ones join and
+    leave mid-flight — continuous batching, not gang scheduling."""
+    with make_engine(system, max_batch=2, max_wait_ms=1.0) as eng:
+        long_fut = eng.submit(1, max_new_tokens=30)
+        time.sleep(0.2)  # the long request is mid-decode by now
+        late_futs = [eng.submit(seed, max_new_tokens=2)
+                     for seed in (2, 3, 4)]
+        assert long_fut.result(60).tokens == expected_tokens(1, 30)
+        for seed, f in zip((2, 3, 4), late_futs):
+            assert f.result(60).tokens == expected_tokens(seed, 2)
+    s = eng.stats()
+    # the late requests were admitted while the long one was running, so
+    # the batch must have been shared at some point
+    assert s["peak_batch"] >= 2
+    assert s["steps"] < 30 + 3 * 2  # overlap: fewer steps than serial sum
+
+
+def test_sixteen_thread_client_hammer(system):
+    """16 concurrent client threads; no lost, duplicated, or cross-wired
+    responses under concurrent submission."""
+    n_threads, per_thread = 16, 4
+    results: dict = {}
+    errors: list = []
+    with make_engine(system, max_batch=4, max_wait_ms=1.0,
+                     n_workers=3) as eng:
+
+        def client(tid):
+            try:
+                futs = []
+                for k in range(per_thread):
+                    seed = tid * 100 + k
+                    n = 1 + (seed % 5)
+                    futs.append((seed, n, eng.submit(seed, max_new_tokens=n)))
+                for seed, n, fut in futs:
+                    results[(seed, n)] = fut.result(timeout=120)
+            except Exception as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+    assert not errors
+    assert len(results) == n_threads * per_thread  # none lost
+    for (seed, n), res in results.items():
+        assert res.tokens == expected_tokens(seed, n), (seed, n)
+    s = eng.stats()
+    assert s["completed"] == n_threads * per_thread
+    assert s["failed"] == 0
+
+
+def test_engine_leak_free_and_deadline_shedding(system):
+    gc.collect()
+    base = live_ref_count()
+    eng = make_engine(system, max_batch=4)
+    # admitted while fresh, expires while the engine is still stopped —
+    # deterministic mid-queue expiry
+    ok = eng.submit(7, max_new_tokens=3)
+    dead = eng.submit(8, max_new_tokens=3, slo_ms=50.0)
+    time.sleep(0.1)
+    with eng:
+        assert ok.result(60).tokens == expected_tokens(7, 3)
+        with pytest.raises(DeadlineExceeded):
+            dead.result(60)
+    gc.collect()
+    assert live_ref_count() == base  # every cache ref released
+    assert eng.stats()["expired"] >= 1
+
+
+# ----------------------------------------------------------------------------
+# fault injection
+# ----------------------------------------------------------------------------
+def _flaky_pool(system, crashes: int):
+    """A pool whose first ``crashes`` decode dispatches die mid-batch."""
+    armed = {"left": crashes}
+    lock = threading.Lock()
+    decode = make_decode_worker(counter_step)
+
+    def flaky(*payload):
+        with lock:
+            if armed["left"] > 0:
+                armed["left"] -= 1
+                raise RuntimeError("injected mid-batch fault")
+        return decode(*payload)
+
+    workers = [system.spawn(flaky) for _ in range(3)]
+    return ActorPool(system, workers, policy="least_loaded")
+
+
+def test_worker_crash_requeues_batch_exactly_once(system):
+    """A worker that dies mid-batch: the engine re-queues the affected
+    requests on another worker; every request still gets exactly its own
+    tokens, exactly once."""
+    pool = _flaky_pool(system, crashes=1)
+    eng = ServeEngine(system, init_fn=counter_init, pool=pool,
+                      max_batch=4, max_wait_ms=5.0)
+    with eng:
+        futs = [eng.submit(seed, max_new_tokens=3) for seed in range(6)]
+        results = [f.result(timeout=60) for f in futs]
+    for seed, res in enumerate(results):
+        assert res.tokens == expected_tokens(seed, 3)
+    s = eng.stats()
+    assert s["requeues"] >= 1          # the injected fault was re-issued
+    assert s["completed"] == 6 and s["failed"] == 0
+    assert len(pool.live_workers()) == 2  # the crashed replica is gone
+
+
+def test_engine_owned_pool_self_heals_after_worker_death(system):
+    """Killing a replica of an engine-owned pool must not shrink capacity:
+    the engine respawns a replacement before the next step."""
+    with make_engine(system, n_workers=2, max_batch=4) as eng:
+        first = eng.submit(1, max_new_tokens=2)
+        assert first.result(60).tokens == expected_tokens(1, 2)
+        eng.pool.workers[0].exit()  # simulate a replica crash
+        futs = [eng.submit(seed, max_new_tokens=3) for seed in (2, 3)]
+        for seed, f in zip((2, 3), futs):
+            assert f.result(60).tokens == expected_tokens(seed, 3)
+        assert len(eng.pool.live_workers()) == 2  # capacity restored
+    assert eng.stats()["respawned"] >= 1
+
+
+def test_permanent_failure_is_per_request_error_not_engine_crash(system):
+    """Every replica poisoned: the affected requests surface the error on
+    their own futures; the engine survives and keeps serving."""
+    pool = _flaky_pool(system, crashes=99)  # kills all 3 workers
+    eng = ServeEngine(system, init_fn=counter_init, pool=pool,
+                      max_batch=4, max_wait_ms=5.0, step_timeout=30.0)
+    with eng:
+        doomed = [eng.submit(seed, max_new_tokens=2) for seed in range(3)]
+        excs = []
+        for f in doomed:
+            with pytest.raises(Exception) as ei:
+                f.result(timeout=60)
+            excs.append(ei.value)
+    assert all(isinstance(e, Exception) for e in excs)
+    s = eng.stats()
+    assert s["failed"] == 3 and s["completed"] == 0
+    # the engine thread exited cleanly via stop(), not by crashing
+    assert not eng._thread.is_alive()
+
+
+# ----------------------------------------------------------------------------
+# deadline-aware scheduler pick + pool async submit
+# ----------------------------------------------------------------------------
+def test_chunk_scheduler_earliest_deadline_first(system):
+    order = []
+
+    def record(tag):
+        order.append(tag)
+        return tag
+
+    w = system.spawn(record)
+    now = time.monotonic()
+    sched = ChunkScheduler([w])
+    out = sched.run([("late",), ("soon",), ("mid",)],
+                    deadlines=[now + 30, now + 10, now + 20])
+    assert out == ["late", "soon", "mid"]   # results stay input-ordered
+    assert order == ["soon", "mid", "late"]  # dispatch was EDF
+
+
+def test_chunk_scheduler_sheds_expired_chunks(system):
+    w = system.spawn(lambda x: x)
+    sched = ChunkScheduler([w])
+    with pytest.raises(DeadlineExceeded):
+        sched.run([(1,), (2,)],
+                  deadlines=[time.monotonic() - 1.0, None])
+    assert sched.stats["expired"] == 1
+
+
+def test_pool_submit_excludes_observed_bad_worker(system):
+    seen = []
+
+    def w1(x):
+        seen.append("w1")
+        return x
+
+    def w2(x):
+        seen.append("w2")
+        return x
+
+    r1, r2 = system.spawn(w1), system.spawn(w2)
+    pool = ActorPool(system, [r1, r2], policy="round_robin")
+    for _ in range(4):
+        fut = pool.submit(1, exclude=[r1])
+        assert fut.result(10) == 1
+        assert fut.worker.actor_id == r2.actor_id
+    assert seen == ["w2"] * 4
+    # excluding everything degrades to normal routing, never strands work
+    assert pool.submit(1, exclude=[r1, r2]).result(10) == 1
+
+
+# ----------------------------------------------------------------------------
+# staged serving across layer actors (PipelineRunner.submit)
+# ----------------------------------------------------------------------------
+def test_pipeline_runner_submit_serves_concurrent_microbatches(system):
+    from repro.dist.pipeline import PipelineRunner
+    s0 = system.spawn(lambda x: x + 1)
+    s1 = system.spawn(lambda x: x * 10)
+    runner = PipelineRunner(system, [s0, s1], depth=3)
+    futs = [runner.submit(i) for i in range(6)]
+    assert [f.result(30) for f in futs] == [(i + 1) * 10 for i in range(6)]
+    # run() is the same machinery
+    assert runner.run(list(range(4))) == [(i + 1) * 10 for i in range(4)]
+
+
+# ----------------------------------------------------------------------------
+# launch CLI: cache sizing guard (regression)
+# ----------------------------------------------------------------------------
+def test_check_cache_capacity_guard():
+    assert check_cache_capacity(64, 65) == 65      # steps+1 fits exactly
+    with pytest.raises(ValueError):
+        check_cache_capacity(65, 65)               # off-by-one caught
+    with pytest.raises(ValueError):
+        check_cache_capacity(-1, 10)
+
+
+# ----------------------------------------------------------------------------
+# ISSUE 3 demo: 32 queued requests, max-batch 8, zero host transfers
+# ----------------------------------------------------------------------------
+def test_demo_32_requests_zero_host_transfers_with_latency_report(system):
+    n_requests, steps = 32, 4
+    eng = make_engine(system, max_batch=8, n_workers=2)
+    # queue everything *before* the engine starts: batches form full
+    futs = [eng.submit(seed, max_new_tokens=steps)
+            for seed in range(n_requests)]
+    t0 = transfer_count()
+    with eng:
+        results = [f.result(timeout=120) for f in futs]
+    assert transfer_count() == t0, \
+        "decode caches must stay device-resident between steps"
+    for seed, res in enumerate(results):
+        assert res.tokens == expected_tokens(seed, steps)
+    s = eng.stats()
+    assert s["peak_batch"] == 8
+    # 32 requests × 4 steps = 128 request-steps in 16 batched steps
+    assert s["steps"] == (n_requests // 8) * steps
+    lat = s["latency"]
+    assert lat["count"] == n_requests
+    assert 0 < lat["p50_ms"] <= lat["p99_ms"]
+    print(f"\ndemo: {n_requests} requests, {s['steps']} batched steps, "
+          f"p50={lat['p50_ms']:.2f}ms p99={lat['p99_ms']:.2f}ms, "
+          f"transfers={transfer_count() - t0}")
