@@ -1,0 +1,141 @@
+"""Dataflow-graph composition benchmark (ISSUE 4): the acceptance diamond
+(source → broadcast(2) → two kernel branches → zip_join → sink) run three
+ways —
+
+* ``host_roundtrip`` — every node is a standalone value-semantics actor
+  and the fan-out/fan-in is orchestrated on the host: each edge pays a
+  device→host read-back and a host→device upload;
+* ``graph_staged``   — the same topology built with ``repro.core.Graph``:
+  interior edges are lowered to ref-emitting actors, so the only host
+  traffic is the final read-back;
+* ``graph_mapped``   — the staged diamond with the two branches fanned
+  out per-chunk through ``map_over`` (ChunkScheduler over a 2-replica
+  pool each).
+
+Besides wall time, the RefRegistry host-transfer counters for one run of
+each variant are recorded — the headline number the PR-over-PR snapshot
+(``BENCH_PR4.json``) tracks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ActorSystem, Graph, In, NDRange, Out, dim_vec,
+                        kernel, memory_stats, reset_transfer_stats)
+
+from .common import emit, timeit
+
+_N = 512
+RESULTS: dict = {}
+
+
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_left")
+def _left(x):
+    return x @ x
+
+
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_right")
+def _right(x):
+    return x * 2.0 + 1.0
+
+
+@kernel(In(jnp.float32), In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_sink")
+def _sink(a, b):
+    return a + b
+
+
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_row")
+def _row(x):
+    return x * 2.0 + 1.0
+
+
+def _traffic(fn) -> dict:
+    reset_transfer_stats()
+    fn()
+    stats = memory_stats()
+    return {"transfers": stats["transfers"], "readbacks": stats["readbacks"]}
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x = (rng.random((_N, _N), np.float32) - 0.5) / _N
+
+    with ActorSystem(max_workers=8) as system:
+        # host-roundtrip baseline: standalone value actors, host fan-in
+        left_w = system.spawn(_left)
+        right_w = system.spawn(_right)
+        sink_w = system.spawn(_sink)
+
+        def host_roundtrip():
+            fl = left_w.request(x)
+            fr = right_w.request(x)
+            return sink_w.ask(fl.result(60), fr.result(60))
+
+        def build_diamond(name, mapped: bool) -> "Graph":
+            g = Graph(system, name=name)
+            s = g.source("x", jnp.float32, shape=(_N, _N))
+            l, r = g.broadcast(s, 2)
+            if mapped:
+                # chunk the element-wise branch only: a matmul is not
+                # row-separable, mixing whole-node and chunked nodes is
+                # exactly what the DAG builder allows
+                bl = g.apply(_left, l)
+                br = g.map_over(_row, r, chunks=4, replicas=2)
+            else:
+                bl, br = g.apply(_left, l), g.apply(_right, r)
+            j1, j2 = g.zip_join(bl, br)
+            g.output(g.apply(_sink, j1, j2))
+            return g
+
+        staged = build_diamond("bench_diamond", mapped=False).build()
+        mapped = build_diamond("bench_diamond_map", mapped=True).build()
+
+        want = host_roundtrip()
+        np.testing.assert_allclose(staged.ask(x), want, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(mapped.ask(x), want, rtol=1e-4, atol=1e-5)
+
+        variants = {
+            "diamond_host_roundtrip": host_roundtrip,
+            "diamond_graph_staged": lambda: staged.ask(x),
+            "diamond_graph_mapped": lambda: mapped.ask(x),
+        }
+        for name, fn in variants.items():
+            t = timeit(fn, repeat=7, warmup=2)
+            traffic = _traffic(fn)
+            emit(f"graph/{name}", t * 1e6,
+                 f"transfers={traffic['transfers']} "
+                 f"readbacks={traffic['readbacks']}")
+            RESULTS[name] = {"us_per_call": round(t * 1e6, 1), **traffic}
+    _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import json
+    import pathlib
+    import platform
+    import time
+
+    import jax
+
+    snap = {
+        "pr": 4,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "workload": {"n": _N, "shape": "diamond(source, broadcast, "
+                     "2 branches, zip_join, sink)"},
+        "variants": RESULTS,
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":  # pragma: no cover - manual invocation
+    run()

@@ -18,6 +18,11 @@ definition site, composition is a builder, pooling is one call:
     pipe = Pipeline(sys_, mode="auto").stage(m_mult).stage(scale).build()
     pool = sys_.opencl_manager().spawn_pool(m_mult, 4, policy="least_loaded")
 
+Non-linear compositions use the typed DAG builder (``repro.core.Graph``):
+nodes are kernels/actors/Python stages, edges are shape/dtype-checked
+ports, and ``build()`` validates the topology before spawning — see the
+README "Dataflow graphs" section and ``examples/graph_diamond.py``.
+
 The v1 positional surface (``mngr.spawn(fn, name, nd_range, *specs)``,
 ``compose``, ``fuse``) remains available as deprecated shims.
 """
@@ -25,9 +30,11 @@ from .actor import Actor, ActorRef, ActorSystem, Message
 from .api import ActorPool, KernelDecl, Pipeline, kernel
 from .compose import ComposedActor, compose, fuse
 from .errors import (AccessViolation, ActorError, ActorFailed,
-                     DeadlineExceeded, DownMessage, ExitMessage,
-                     MailboxClosed, SignatureMismatch)
+                     ArityMismatchError, DanglingPortError, DeadlineExceeded,
+                     DownMessage, ExitMessage, GraphCycleError, GraphError,
+                     MailboxClosed, PortTypeMismatchError, SignatureMismatch)
 from .facade import KernelActor
+from .graph import Graph, GraphNode, GraphRef, Port, PortType
 from .manager import Device, DeviceManager, Platform, Program
 from .memref import (DeviceRef, RefRegistry, as_device_array, live_ref_count,
                      memory_stats, reset_transfer_stats, transfer_count,
@@ -39,9 +46,12 @@ __all__ = [
     "Actor", "ActorRef", "ActorSystem", "Message",
     "ActorPool", "KernelDecl", "Pipeline", "kernel",
     "ComposedActor", "compose", "fuse",
-    "AccessViolation", "ActorError", "ActorFailed", "DeadlineExceeded",
-    "DownMessage", "ExitMessage", "MailboxClosed", "SignatureMismatch",
+    "AccessViolation", "ActorError", "ActorFailed", "ArityMismatchError",
+    "DanglingPortError", "DeadlineExceeded", "DownMessage", "ExitMessage",
+    "GraphCycleError", "GraphError", "MailboxClosed",
+    "PortTypeMismatchError", "SignatureMismatch",
     "KernelActor",
+    "Graph", "GraphNode", "GraphRef", "Port", "PortType",
     "Device", "DeviceManager", "Platform", "Program",
     "DeviceRef", "RefRegistry", "as_device_array", "live_ref_count",
     "memory_stats", "reset_transfer_stats", "transfer_count",

@@ -41,6 +41,7 @@ import inspect
 import itertools
 import threading
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, List, Optional, Sequence, Union
 
 from .actor import ActorRef, ActorSystem
@@ -48,6 +49,10 @@ from .memref import payload_device
 from .signature import KernelSignature, NDRange
 
 __all__ = ["kernel", "KernelDecl", "Pipeline", "ActorPool"]
+
+#: distinguishes "caller passed no timeout" from an explicit ``None``
+#: (= wait forever) in :meth:`ActorPool.ask`
+_UNSET = object()
 
 
 # ----------------------------------------------------------------------------
@@ -94,6 +99,14 @@ class KernelDecl:
             raise TypeError(f"unknown kernel options: {sorted(unknown)}")
         cfg.update(overrides)
         return KernelDecl(fn, specs, **cfg)
+
+    def out_structs(self, input_structs: Sequence):
+        """Abstract output ``jax.ShapeDtypeStruct``\\ s for the given input
+        structs — how :class:`repro.core.graph.Graph` derives typed ports
+        from the signature at build time (paper §3.5)."""
+        from .facade import detect_fn_kwargs, eval_output_structs
+        return eval_output_structs(self.fn, self.signature, self.nd_range,
+                                   detect_fn_kwargs(self.fn), input_structs)
 
     def __repr__(self):
         return (f"<kernel {self.name!r} {self.signature} "
@@ -211,70 +224,58 @@ class Pipeline:
             return self._build_staged()
         return self._build_fused()
 
-    def _build_staged(self) -> ActorRef:
-        """Staged (event-chained) composition, Listing 4 style.
+    def _graph_stages_of(self, ref: ActorRef):
+        """The underlying stage refs of a Graph-backed linear pipe (the
+        Graph analogue of :meth:`_composed_stages_of` inlining)."""
+        from .graph import GraphRef
+        if isinstance(ref, GraphRef) and ref.plan.chain_refs:
+            return list(ref.plan.chain_refs)
+        return None
 
-        Intermediate kernel stages are spawned with ``emit="ref"`` whenever
-        the *next* stage can unwrap a :class:`~repro.core.memref.DeviceRef`
-        (i.e. is itself a kernel stage), so data stays device-resident
-        between hops and only the final stage honours its declared value/
-        reference semantics. Existing kernel-actor refs are cloned rather
-        than mutated; opaque actors and bare-callable adapters keep value
-        payloads.
+    def _build_staged(self) -> ActorRef:
+        """Staged (event-chained) composition, Listing 4 style — built as a
+        **linear dataflow graph** (:class:`repro.core.graph.Graph`).
+
+        Pipeline is the thin linear wrapper over the DAG builder: each
+        stage becomes a chain node joined by untyped splat edges (the
+        whole payload tuple flows per hop, exactly the v1 semantics), and
+        the Graph lowering decides ref emission — an intermediate kernel
+        stage is spawned (or cloned, never mutated) with ``emit="ref"``
+        whenever its successor can unwrap a
+        :class:`~repro.core.memref.DeviceRef`, so data stays
+        device-resident between hops and only the final stage honours its
+        declared value/reference semantics (paper §3.5).
         """
-        from .compose import ComposedActor
+        from .graph import Graph
         mngr = self.system.opencl_manager()
         # flatten to (kind, target, device), inlining pre-composed chains
+        # (v1 ComposedActor refs and Graph-backed linear pipes alike)
         entries: List[tuple] = []
         for s in self._stages:
             if isinstance(s.target, KernelDecl):
                 entries.append(("decl", s.target, s.device or self.device))
             elif isinstance(s.target, ActorRef):
-                inner = self._composed_stages_of(s.target)
+                inner = (self._composed_stages_of(s.target)
+                         or self._graph_stages_of(s.target))
                 for r in (inner if inner else [s.target]):
-                    kind = ("kernel_ref" if self._kernel_actor_of(r)
-                            else "opaque_ref")
-                    entries.append((kind, r, None))
+                    entries.append(("ref", r, None))
             else:
                 entries.append(("fn", s.target, None))
 
-        def ref_capable(i: int) -> bool:
-            # a stage can consume DeviceRefs if it is a kernel stage with
-            # no preprocess: a preprocess runs on the raw payload *before*
-            # the facade's ref unwrapping, so it must see values
-            if i >= len(entries):
-                return False
-            kind, target, _ = entries[i]
+        if len(entries) == 1:
+            kind, target, device = entries[0]
             if kind == "decl":
-                return target.preprocess is None
-            if kind == "kernel_ref":
-                ka = self._kernel_actor_of(target)
-                return ka is not None and ka.preprocess is None
-            return False
+                return mngr.spawn(target, device=device)
+            if kind == "fn":
+                return self.system.spawn(target)
+            return target
 
-        flat: List[ActorRef] = []
-        for i, (kind, target, device) in enumerate(entries):
-            # forward device-resident refs when the successor can consume
-            # them; the last stage keeps its declared semantics
-            forward = i + 1 < len(entries) and ref_capable(i + 1)
-            if kind == "decl":
-                emit = ("ref" if forward and target.postprocess is None
-                        else "declared")
-                flat.append(mngr.spawn(target, device=device, emit=emit))
-            elif kind == "kernel_ref":
-                ka = self._kernel_actor_of(target)
-                if (forward and ka is not None and ka.emit != "ref"
-                        and ka.postprocess is None):
-                    flat.append(self.system.spawn(ka.clone(emit="ref")))
-                else:
-                    flat.append(target)
-            elif kind == "opaque_ref":
-                flat.append(target)
-            else:
-                flat.append(self.system.spawn(target))
-        if len(flat) == 1:
-            return flat[0]
-        return self.system.spawn(ComposedActor(flat))
+        g = Graph(self.system, name=self.name)
+        cur = g.chain_source()
+        for kind, target, device in entries:
+            cur = g.chain(target, cur, device=device)
+        g.output(cur)
+        return g.build()
 
     def _build_fused(self) -> ActorRef:
         from .facade import KernelActor
@@ -379,13 +380,17 @@ class ActorPool:
     """
 
     def __init__(self, system: ActorSystem, workers: Sequence[ActorRef], *,
-                 policy: str = "round_robin", devices: Optional[Sequence] = None):
+                 policy: str = "round_robin", devices: Optional[Sequence] = None,
+                 default_timeout: Optional[float] = 120.0):
         if not workers:
             raise ValueError("pool needs at least one worker")
         if policy not in ("round_robin", "least_loaded"):
             raise ValueError(f"unknown policy {policy!r}")
         self.system = system
         self.policy = policy
+        #: default ``ask`` timeout in seconds (None = wait forever); set
+        #: per-pool instead of relying on the old hardcoded 120 s
+        self.default_timeout = default_timeout
         self._workers = list(workers)
         devices = list(devices) if devices else [None] * len(self._workers)
         self._devices = {w.actor_id: d for w, d in zip(self._workers, devices)}
@@ -489,8 +494,31 @@ class ActorPool:
     def request(self, *payload: Any) -> Future:
         return self.submit(*payload)
 
-    def ask(self, *payload: Any, timeout: Optional[float] = 120.0) -> Any:
-        return self.request(*payload).result(timeout=timeout)
+    def ask(self, *payload: Any, timeout: Any = _UNSET) -> Any:
+        """Synchronous routed request. ``timeout`` defaults to the pool's
+        ``default_timeout``; on expiry the raised :class:`TimeoutError`
+        names the worker the payload was routed to, so a wedged replica is
+        identifiable from the exception alone."""
+        if timeout is _UNSET:
+            timeout = self.default_timeout
+        fut = self.submit(*payload)
+        try:
+            return fut.result(timeout=timeout)
+        except FuturesTimeout:
+            if fut.done():
+                # the *worker* raised a TimeoutError (on 3.11+ the futures
+                # class is the builtin) — surface it, don't relabel it as
+                # a pool timeout pointing at a healthy replica
+                raise
+            w = getattr(fut, "worker", None)
+            wid = getattr(w, "actor_id", "?")
+            # FuturesTimeout: the class existing except-clauses around a
+            # future-based API already catch (the builtin alias on 3.11+)
+            raise FuturesTimeout(
+                f"pool request timed out after {timeout}s; routed to worker "
+                f"ActorRef#{wid} ({'alive' if w is not None and w.is_alive() else 'dead'}, "
+                f"{self.outstanding(w) if w is not None else '?'} outstanding)"
+            ) from None
 
     def map(self, payloads: Sequence[tuple], *,
             timeout: Optional[float] = 300.0, deadlines=None,

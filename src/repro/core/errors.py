@@ -36,6 +36,33 @@ class DeadlineExceeded(ActorError):
     while) being served; the serve engine surfaces this per request."""
 
 
+class GraphError(ActorError):
+    """Base class for dataflow-graph construction/validation errors
+    (``repro.core.graph``). Every subclass message names the offending
+    node path (``<graph>/<node>``) — the build-time typed-actor check the
+    paper gets from CAF's typed actor interfaces (§3.5)."""
+
+
+class GraphCycleError(GraphError):
+    """The graph topology contains a cycle; the message lists the node
+    paths along the cycle."""
+
+
+class DanglingPortError(GraphError):
+    """An input slot was never wired, or a produced port has no consumer
+    and is not a graph output (device-resident data that would leak)."""
+
+
+class ArityMismatchError(GraphError):
+    """A node is wired with a different number of input ports than its
+    kernel signature declares."""
+
+
+class PortTypeMismatchError(GraphError):
+    """An edge's dtype/shape does not match the consumer's declared
+    signature (or the producer's abstract-eval'd output type)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class DownMessage:
     """Sent to monitors when a watched actor terminates (paper §2.1)."""

@@ -46,7 +46,47 @@ from .manager import Device, Program
 from .memref import DeviceRef, as_device_array, registry
 from .signature import In, InOut, KernelSignature, Local, NDRange, Out
 
-__all__ = ["KernelActor"]
+__all__ = ["KernelActor", "detect_fn_kwargs", "eval_output_structs"]
+
+#: static keywords a kernel callable may accept from the runtime
+_KERNEL_KWARGS = ("nd_range", "out_shapes", "local_shapes")
+
+
+def detect_fn_kwargs(fn: Callable) -> set:
+    """Which of the runtime-supplied static keywords ``fn`` accepts — the
+    single source of truth shared by :class:`KernelActor` and
+    :meth:`~repro.core.api.KernelDecl.out_structs`."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins
+        return set()
+    return {k for k in _KERNEL_KWARGS if k in params}
+
+
+def eval_output_structs(fn: Callable, signature: KernelSignature,
+                        nd_range: Optional[NDRange], fn_kwargs,
+                        input_structs: Sequence) -> Tuple:
+    """Abstract-evaluate a kernel: the output ``jax.ShapeDtypeStruct``\\ s
+    for the given input structs, without running the kernel.
+
+    This is how ``repro.core.graph`` derives *typed ports* from a
+    :class:`KernelSignature` at build time (paper §3.5: composition over
+    statically checkable typed actor interfaces): the kernel's traceable
+    callable is bound to its static keywords (``nd_range`` /
+    ``local_shapes``), then ``jax.eval_shape``'d.
+    """
+    static_kwargs = {}
+    if "nd_range" in fn_kwargs:
+        static_kwargs["nd_range"] = nd_range
+    if "local_shapes" in fn_kwargs:
+        static_kwargs["local_shapes"] = tuple(
+            s.resolved_shape() for s in signature.local_specs)
+
+    def wrapped(*inputs):
+        out = fn(*inputs, **static_kwargs)
+        return out if isinstance(out, tuple) else (out,)
+
+    return tuple(jax.eval_shape(wrapped, *input_structs))
 
 
 class KernelActor(Actor):
@@ -76,12 +116,7 @@ class KernelActor(Actor):
         self._jitted = None
         # Kernels may want the index space / local sizes / resolved output
         # shapes; detect which keywords the callable accepts once.
-        try:
-            params = inspect.signature(fn).parameters
-            self._fn_kwargs = {k for k in ("nd_range", "out_shapes", "local_shapes")
-                               if k in params}
-        except (TypeError, ValueError):  # pragma: no cover - builtins
-            self._fn_kwargs = set()
+        self._fn_kwargs = detect_fn_kwargs(fn)
 
     # -- compilation ------------------------------------------------------
     def _build(self):
@@ -191,6 +226,11 @@ class KernelActor(Actor):
         if result is None:
             return None
         return result[0] if len(result) == 1 else result
+
+    def out_structs(self, input_structs: Sequence) -> Tuple:
+        """Abstract output types for ``input_structs`` (graph port typing)."""
+        return eval_output_structs(self.fn, self.signature, self.nd_range,
+                                   self._fn_kwargs, input_structs)
 
     def clone(self, emit: Optional[str] = None) -> "KernelActor":
         """A fresh (unspawned) actor sharing this one's declaration.

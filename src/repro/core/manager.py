@@ -219,7 +219,8 @@ class DeviceManager:
         return self.system.spawn(actor)
 
     def spawn_pool(self, source, n: int, *, policy: str = "round_robin",
-                   devices: Optional[Sequence[Device]] = None, **kwargs):
+                   devices: Optional[Sequence[Device]] = None,
+                   default_timeout: Optional[float] = 120.0, **kwargs):
         """Spawn ``n`` replicas of a kernel behind one pool ref.
 
         Replicas are placed round-robin over ``devices`` (default: every
@@ -227,6 +228,8 @@ class DeviceManager:
         routes per ``policy`` ("round_robin" | "least_loaded", the latter
         keyed on outstanding requests then ``Device.queue_depth()``) and
         plugs into :class:`~repro.core.scheduler.ChunkScheduler`.
+        ``default_timeout`` becomes the pool's ``ask`` timeout (None =
+        wait forever).
         """
         from .api import ActorPool
         if n < 1:
@@ -237,4 +240,5 @@ class DeviceManager:
             dev = devs[i % len(devs)]
             refs.append(self.spawn(source, device=dev, **kwargs))
             placed.append(dev)
-        return ActorPool(self.system, refs, policy=policy, devices=placed)
+        return ActorPool(self.system, refs, policy=policy, devices=placed,
+                         default_timeout=default_timeout)

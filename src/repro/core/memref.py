@@ -420,10 +420,22 @@ class DeviceRef:
             ".to_value() for an explicit host copy")
 
     def __repr__(self):
-        state = self._state if self._state != "live" else (
-            "ready" if self.is_ready() else "pending")
-        return (f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}"
-                f"[{self.access}, {state}]")
+        """Diagnostic form: dtype/shape, access rights, lifecycle state,
+        byte size, and where the payload lives — enough to read a
+        graph-edge error without a debugger. Examples::
+
+            DeviceRef<float32>[16][rw, live/ready, 64B @ TFRT_CPU_0]
+            DeviceRef<float32>[16][r, spilled, 64B @ host]
+            DeviceRef<float32>[16][rw, released]
+        """
+        head = f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}"
+        if self._state == "live":
+            phase = "ready" if self.is_ready() else "pending"
+            loc = str(self.device) if self.device is not None else "?"
+            return f"{head}[{self.access}, live/{phase}, {self.nbytes}B @ {loc}]"
+        if self._state == "spilled":
+            return f"{head}[{self.access}, spilled, {self.nbytes}B @ host]"
+        return f"{head}[{self.access}, {self._state}]"
 
 
 def _rebuild_spilled(host, dtype_str, shape, access) -> DeviceRef:

@@ -33,7 +33,7 @@ from typing import Any, Callable, List, Optional, Sequence
 
 from .actor import ActorRef
 from .errors import DeadlineExceeded
-from .memref import payload_device
+from .memref import payload_device, tree_release
 
 __all__ = ["split_offload", "ChunkScheduler", "WorkItem"]
 
@@ -243,6 +243,12 @@ class ChunkScheduler:
                         # a speculative copy outlived a recorded permanent
                         # failure: prefer the successful result
                         item.result = fut.result()
+                    else:
+                        # duplicate success from a speculative race: the
+                        # loser's DeviceRefs would stay registered forever
+                        # (inflating live-bytes placement signals) if
+                        # simply dropped
+                        tree_release(fut.result())
                     idle.append(worker)
                 self._cv.notify_all()
 
@@ -298,7 +304,12 @@ class ChunkScheduler:
                     wait_for = min(wait_for, deadline - time.monotonic())
                     if wait_for <= 0:
                         raise TimeoutError(
-                            f"{remaining} chunks unfinished after timeout")
+                            f"{remaining} chunks unfinished after {timeout}s "
+                            f"(outstanding: {sorted(outstanding)}, "
+                            f"pending: {len(pending)}, "
+                            f"live workers: "
+                            f"{sum(w.is_alive() for w in self._workers)}"
+                            f"/{len(self._workers)})")
                 self._cv.wait(timeout=wait_for)
 
             # drain callbacks for requests still in flight (speculative

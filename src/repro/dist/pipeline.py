@@ -124,14 +124,29 @@ class PipelineRunner:
     staged *serving* across layer actors drives it directly (one request's
     activations per call, concurrent up to ``depth``); :meth:`run` is the
     batch-mode loop over it.
+
+    Construction takes either ``stages`` (a linear actor chain, built
+    through the :class:`~repro.core.api.Pipeline` wrapper) **or**
+    ``graph=`` — a :class:`repro.core.graph.Graph` (built on the fly) or
+    an already-built :class:`~repro.core.graph.GraphRef` — so microbatch
+    streaming works over arbitrary device-resident DAGs (fan-out/fan-in
+    model stages), not just chains.
     """
 
-    def __init__(self, system: ActorSystem, stages: Sequence[ActorRef],
-                 depth: int = 2):
-        if not stages:
-            raise ValueError("need at least one stage")
+    def __init__(self, system: ActorSystem,
+                 stages: Optional[Sequence[ActorRef]] = None,
+                 depth: int = 2, *, graph=None):
+        if (stages is None) == (graph is None):
+            raise ValueError("pass exactly one of stages or graph")
         self.depth = depth
-        self._chain = Pipeline(system, mode="staged").stages(stages).build()
+        if graph is not None:
+            from repro.core.graph import Graph
+            self._chain = graph.build() if isinstance(graph, Graph) else graph
+        else:
+            if not stages:
+                raise ValueError("need at least one stage")
+            self._chain = Pipeline(system, mode="staged").stages(
+                stages).build()
         # shared in-flight window: concurrent submit() callers (a serve
         # engine's request threads) and run() draw from the same budget
         self._sem = threading.Semaphore(depth)
@@ -159,7 +174,13 @@ class PipelineRunner:
                 f"pipeline in-flight window ({self.depth}) still full "
                 f"after {timeout}s")
         payload = mb if isinstance(mb, tuple) else (mb,)
-        fut = self._chain.request(*payload)
+        try:
+            fut = self._chain.request(*payload)
+        except BaseException:
+            # the window is instance state now: a synchronous request
+            # failure must hand its slot back or the runner shrinks
+            self._sem.release()
+            raise
         out: Future = Future()
 
         def _done(f):

@@ -9,7 +9,8 @@ steps. See the README's "Serving" section for the engine diagram and the
 SLO/backpressure knobs.
 """
 from .batcher import Batcher
-from .engine import EngineStopped, ServeEngine, make_decode_worker
+from .engine import (EngineStopped, ServeEngine, make_decode_worker,
+                     make_graph_decode_worker)
 from .request import (AdmissionError, QueueClosed, QueueOverflow, Request,
                       RequestQueue, ServeResult, SLOExceeded)
 from .stats import EWMA, LatencyStats
@@ -17,6 +18,7 @@ from .stats import EWMA, LatencyStats
 __all__ = [
     "Batcher",
     "EngineStopped", "ServeEngine", "make_decode_worker",
+    "make_graph_decode_worker",
     "AdmissionError", "QueueClosed", "QueueOverflow", "Request",
     "RequestQueue", "ServeResult", "SLOExceeded",
     "EWMA", "LatencyStats",

@@ -40,14 +40,15 @@ import numpy as np
 from repro.core.actor import ActorSystem
 from repro.core.api import ActorPool
 from repro.core.errors import DeadlineExceeded
-from repro.core.memref import DeviceRef, tree_wrap
+from repro.core.memref import DeviceRef, tree_release, tree_wrap
 from repro.core.scheduler import ChunkScheduler
 
 from .batcher import Batcher
 from .request import Request, RequestQueue, ServeResult
 from .stats import LatencyStats
 
-__all__ = ["ServeEngine", "make_decode_worker", "EngineStopped"]
+__all__ = ["ServeEngine", "make_decode_worker", "make_graph_decode_worker",
+           "EngineStopped"]
 
 
 class EngineStopped(RuntimeError):
@@ -95,10 +96,104 @@ def make_decode_worker(step_fn: Callable, *, combine: Optional[Callable] = None,
         leaves = jax.tree_util.tree_leaves(new_cache)
         if len(leaves) != nleaves:
             raise ValueError("step_fn changed the cache pytree structure")
-        out = tuple(tuple(DeviceRef(split(leaf, b, i))
-                          for i, leaf in enumerate(leaves))
-                    for b in range(nreq))
-        return np.asarray(jax.device_get(new_tokens)), out
+        created = []
+        try:
+            out = []
+            for b in range(nreq):
+                row = []
+                for i, leaf in enumerate(leaves):
+                    ref = DeviceRef(split(leaf, b, i))
+                    created.append(ref)
+                    row.append(ref)
+                out.append(tuple(row))
+            return np.asarray(jax.device_get(new_tokens)), tuple(out)
+        except BaseException:
+            # a failing split/read-back must not leak the per-request
+            # refs already carved out — the step will be retried
+            for r in created:
+                r.release()
+            raise
+
+    return decode
+
+
+def make_graph_decode_worker(step_graph, *, combine: Optional[Callable] = None,
+                             split: Optional[Callable] = None,
+                             timeout: float = 120.0) -> Callable:
+    """An actor behavior whose decode step is a **built dataflow graph**
+    (:meth:`repro.core.graph.Graph.build`), instead of a jitted
+    ``step_fn`` — multi-kernel decode steps (fan-out heads, gather/merge
+    stages) plug straight into continuous batching.
+
+    Graph contract: sources are ``(tokens[B], *cache_leaves)`` and outputs
+    are ``(next_tokens[B], *new_cache_leaves)``, leaves batched on the
+    leading axis (override with ``combine``/``split`` as in
+    :func:`make_decode_worker`). Cache-leaf outputs declared with
+    ``as_ref=True`` stay device-resident across steps; the batched inputs
+    are handed to the graph as read-only :class:`DeviceRef`\\ s so interior
+    edges dispatch zero-copy. Like the jitted worker, nothing is donated
+    or mutated: a failed step replays verbatim on another replica.
+    """
+    if combine is None:
+        combine = lambda leaves, i: jnp.stack(leaves)
+    if split is None:
+        split = lambda leaf, b, i: leaf[b]
+
+    def decode(tag: str, tokens: tuple, caches: tuple, treedef):
+        if tag != "step":
+            raise ValueError(f"decode worker got unknown message {tag!r}")
+        nreq = len(caches)
+        nleaves = len(caches[0])
+        cols = [DeviceRef(combine([caches[b][i].array for b in range(nreq)],
+                                  i), access="r")
+                for i in range(nleaves)]
+        try:
+            res = step_graph.ask(jnp.asarray(tokens), *cols, timeout=timeout)
+            # a single-output graph resolves to its bare value (the
+            # cache-less nleaves == 0 case); normalize before the check
+            if not isinstance(res, tuple):
+                res = (res,)
+            created: List[DeviceRef] = []
+            try:
+                if len(res) != 1 + nleaves:
+                    raise ValueError(
+                        "graph step must return (next_tokens, "
+                        f"*cache_leaves); got {len(res)} outputs for "
+                        f"{nleaves} cache leaves")
+                new_tokens, new_cols = res[0], res[1:]
+                leaves = [c.array if isinstance(c, DeviceRef)
+                          else jnp.asarray(c) for c in new_cols]
+                out = []
+                for b in range(nreq):
+                    row = []
+                    for i, leaf in enumerate(leaves):
+                        ref = DeviceRef(split(leaf, b, i))
+                        created.append(ref)
+                        row.append(ref)
+                    out.append(tuple(row))
+                for c in new_cols:
+                    if isinstance(c, DeviceRef):
+                        c.release()
+                if isinstance(new_tokens, DeviceRef):
+                    toks = new_tokens.to_value()
+                    new_tokens.release()
+                else:
+                    toks = np.asarray(jax.device_get(new_tokens))
+                return toks, tuple(out)
+            except BaseException:
+                # the graph handed us ownership of its output refs; a
+                # failed split/read-back must not leak them (or the
+                # per-request refs already carved out) on every retry
+                for r in created:
+                    r.release()
+                tree_release(res)
+                raise
+        finally:
+            # released last: a graph may pass an input leaf through
+            # unchanged, so its array must stay readable until the split
+            # above has consumed it (release is idempotent for that case)
+            for c in cols:
+                c.release()
 
     return decode
 
@@ -136,6 +231,7 @@ class ServeEngine:
 
     def __init__(self, system: ActorSystem, step_fn: Optional[Callable] = None,
                  init_fn: Optional[Callable] = None, *,
+                 step_graph=None,
                  pool: Optional[ActorPool] = None, n_workers: int = 2,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
                  allow_join: bool = True, max_attempts: int = 3,
@@ -145,14 +241,32 @@ class ServeEngine:
                  split: Optional[Callable] = None):
         if init_fn is None:
             raise ValueError("init_fn is required (per-request cache setup)")
+        if step_fn is not None and step_graph is not None:
+            raise ValueError("pass step_fn or step_graph, not both")
+        if pool is not None and (step_fn is not None
+                                 or step_graph is not None):
+            raise ValueError(
+                "an adopted pool brings its own decode behavior; "
+                "step_fn/step_graph would be silently ignored — pass one "
+                "or the other")
         behavior = None
         if pool is None:
-            if step_fn is None:
-                raise ValueError("need step_fn when no pool is supplied")
+            if step_fn is None and step_graph is None:
+                raise ValueError(
+                    "need step_fn or step_graph when no pool is supplied")
             if device is None:
                 device = system.opencl_manager().find_device()
-            behavior = make_decode_worker(step_fn, combine=combine,
-                                          split=split)
+            if step_graph is not None:
+                # the model step is a built dataflow graph (multi-kernel
+                # DAG); replicas share the graph's node actors, so the
+                # pool here buys step pipelining + crash replay, not
+                # extra device parallelism
+                behavior = make_graph_decode_worker(
+                    step_graph, combine=combine, split=split,
+                    timeout=step_timeout)
+            else:
+                behavior = make_decode_worker(step_fn, combine=combine,
+                                              split=split)
             workers = [system.spawn(behavior) for _ in range(n_workers)]
             pool = ActorPool(system, workers, policy="least_loaded",
                              devices=[device] * len(workers))
