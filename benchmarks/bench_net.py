@@ -1,0 +1,104 @@
+"""Cross-node transport cost (ISSUE 5).
+
+Measures what distribution actually costs on this runtime:
+
+* **stage hop latency** — one ``ask`` through a local actor vs. the same
+  behavior behind a :class:`~repro.net.RemoteActorRef` (two in-process
+  nodes over a localhost socket, so the delta is the wire path: encode/
+  spill, framing, broker dispatch, unspill/decode — no network in the
+  way);
+* **wire bytes** — a spilled float32 activation raw vs. int8-compressed
+  (:func:`repro.dist.collectives.quantize_ref` wire format), per payload
+  size.
+
+Writes ``BENCH_PR5.json`` at the repo root so PR-over-PR transport
+trajectories are diffable.
+
+    PYTHONPATH=src python -m benchmarks.bench_net
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+import numpy as np
+
+from .common import emit, timeit
+
+_SIZES = (1 << 10, 1 << 14, 1 << 18)   # float32 elements per activation
+_ROWS: dict = {}
+
+
+def run() -> None:
+    from repro.core import ActorSystem, DeviceRef
+    from repro.net import NodeRuntime, wire
+
+    sa = ActorSystem("bench-a", max_workers=4)
+    sb = ActorSystem("bench-b", max_workers=4)
+    na = NodeRuntime(sa, name="a", listen=("127.0.0.1", 0))
+    nb = NodeRuntime(sb, name="b")
+    nb.connect(na.address)
+    na.wait_for_peer("b", 30)
+    try:
+        # -- hop latency ---------------------------------------------------
+        def inc_ref(ref):
+            return DeviceRef(ref.array + 1)
+
+        local = sa.spawn(inc_ref)
+        nb.publish("inc", sb.spawn(inc_ref))
+        remote = na.remote_actor("b", "inc")
+
+        for n in _SIZES:
+            x = np.random.RandomState(0).randn(n).astype(np.float32)
+            payload = DeviceRef.put(x)
+            t_local = timeit(lambda: local.ask(payload), repeat=20)
+            t_remote = timeit(lambda: remote.ask(payload), repeat=20)
+            emit(f"hop_local_n{n}", t_local * 1e6)
+            emit(f"hop_remote_n{n}", t_remote * 1e6,
+                 f"x{t_remote / max(t_local, 1e-9):.1f} vs local")
+            raw = wire.encoded_size((payload,))
+            comp = wire.encoded_size((payload,), compress=True)
+            emit(f"wire_raw_bytes_n{n}", raw, "bytes")
+            emit(f"wire_int8_bytes_n{n}", comp,
+                 f"{raw / comp:.2f}x smaller")
+            _ROWS[f"n{n}"] = {
+                "local_hop_us": round(t_local * 1e6, 1),
+                "remote_hop_us": round(t_remote * 1e6, 1),
+                "wire_raw_bytes": raw,
+                "wire_int8_bytes": comp,
+                "compression_ratio": round(raw / comp, 2),
+            }
+    finally:
+        na.shutdown()
+        nb.shutdown()
+        sa.shutdown()
+        sb.shutdown()
+    _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import jax
+
+    snap = {
+        "pr": 5,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "workload": {
+            "hop": "ask(DeviceRef[float32 n]) -> DeviceRef, localhost "
+                   "socket pair, in-process nodes",
+            "sizes": list(_SIZES),
+        },
+        "sizes": _ROWS,
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR5.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -22,8 +22,10 @@ from __future__ import annotations
 import itertools
 import threading
 import traceback
+import weakref
 from collections import deque
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future, InvalidStateError, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Optional, Tuple
 
 from .errors import ActorFailed, DownMessage, ExitMessage, MailboxClosed
@@ -31,6 +33,31 @@ from .errors import ActorFailed, DownMessage, ExitMessage, MailboxClosed
 __all__ = ["Actor", "ActorRef", "ActorSystem", "Message"]
 
 _MAX_MSGS_PER_SLICE = 16  # fairness: yield the worker thread periodically
+
+#: distinguishes "caller passed no timeout" from an explicit ``None``
+#: (= wait forever) in :meth:`ActorRef.ask`
+_UNSET = object()
+
+
+def _safe_set_result(fut: Optional[Future], value: Any) -> None:
+    """Resolve a reply future, tolerating a caller that already cancelled
+    it (or a racing duplicate resolution) — a cancelled request must never
+    crash the actor that eventually answers it."""
+    if fut is None or fut.cancelled():
+        return
+    try:
+        fut.set_result(value)
+    except InvalidStateError:
+        pass
+
+
+def _safe_set_exception(fut: Optional[Future], exc: BaseException) -> None:
+    if fut is None or fut.cancelled():
+        return
+    try:
+        fut.set_exception(exc)
+    except InvalidStateError:
+        pass
 
 
 class Message:
@@ -62,9 +89,28 @@ class ActorRef:
         self._system._enqueue(self.actor_id, Message(payload, fut, None))
         return fut
 
-    def ask(self, *payload: Any, timeout: Optional[float] = 120.0) -> Any:
-        """Synchronous request/receive (paper's ``scoped_actor`` pattern)."""
-        return self.request(*payload).result(timeout=timeout)
+    def ask(self, *payload: Any, timeout: Any = _UNSET) -> Any:
+        """Synchronous request/receive (paper's ``scoped_actor`` pattern).
+
+        ``timeout`` defaults to the owning system's ``default_ask_timeout``
+        (an explicit ``None`` waits forever). On expiry the raised
+        :class:`TimeoutError` names the actor and its liveness, so a
+        wedged-vs-dead target is identifiable from the exception alone.
+        """
+        if timeout is _UNSET:
+            timeout = getattr(self._system, "default_ask_timeout", 120.0)
+        fut = self.request(*payload)
+        try:
+            return fut.result(timeout=timeout)
+        except FuturesTimeout:
+            if fut.done():
+                # the *behavior* raised a TimeoutError — surface it rather
+                # than relabeling it as an ask() timeout
+                raise
+            alive = "alive" if self.is_alive() else "dead"
+            raise FuturesTimeout(
+                f"ask() timed out after {timeout}s waiting on actor "
+                f"#{self.actor_id} ({alive})") from None
 
     # -- supervision ------------------------------------------------------
     def monitor(self, watcher: "ActorRef") -> None:
@@ -78,6 +124,18 @@ class ActorRef:
 
     def is_alive(self) -> bool:
         return self._system._is_alive(self.actor_id)
+
+    # -- distribution policy ----------------------------------------------
+    def __reduce__(self):
+        # Mirrors DeviceRef's explicit refusal: a ref is a process-local
+        # handle (it closes over the ActorSystem and its scheduler), so
+        # shipping one inside a cross-node payload fails here with an
+        # actionable message instead of deep inside pickle.
+        raise TypeError(
+            "ActorRef is a process-local handle and cannot be pickled; "
+            "for cross-node use, publish the actor on its node "
+            "(NodeRuntime.publish) and resolve it with remote_actor(), "
+            "or send plain data instead")
 
     # -- composition ------------------------------------------------------
     def __mul__(self, other: "ActorRef") -> "ActorRef":
@@ -141,8 +199,13 @@ class ActorSystem:
     module, spawn actors, shut down.
     """
 
-    def __init__(self, name: str = "repro", max_workers: int = 8):
+    def __init__(self, name: str = "repro", max_workers: int = 8,
+                 default_ask_timeout: Optional[float] = 120.0):
         self.name = name
+        #: system-wide default for :meth:`ActorRef.ask` (seconds; ``None``
+        #: waits forever) — mirrors ``ActorPool.default_timeout`` so the
+        #: old hardcoded 120 s is a policy, not a constant
+        self.default_ask_timeout = default_ask_timeout
         self._executor = ThreadPoolExecutor(max_workers=max_workers,
                                             thread_name_prefix=f"{name}-sched")
         self._actors: dict[int, _ActorState] = {}
@@ -195,35 +258,82 @@ class ActorSystem:
 
     # -- supervision ------------------------------------------------------
     def monitor(self, watcher: ActorRef, target: ActorRef) -> None:
-        st = self._actors.get(target.actor_id)
-        if st is None or not st.alive:
-            watcher.send(DownMessage(target.actor_id, st.reason if st else None))
+        """Register ``watcher`` for a :class:`DownMessage` when ``target``
+        terminates.
+
+        The liveness re-check happens **under the target's lock**: a target
+        that terminates between an unlocked check and the registration
+        would otherwise have already snapshotted its monitor list, and the
+        watcher would never hear about the death. If the target is (or
+        just became) dead, the ``DownMessage`` is delivered immediately.
+
+        Remote targets (``repro.net.RemoteActorRef``) carry their own
+        registration path; dispatching here keeps ``system.monitor`` the
+        single network-transparent entry point.
+        """
+        if getattr(target, "is_remote", False):
+            target.monitor(watcher)
             return
-        with st.lock:
-            st.monitors.append(watcher)
+        st = self._actors.get(target.actor_id)
+        if st is not None:
+            with st.lock:
+                if st.alive:
+                    st.monitors.append(watcher)
+                    return
+        watcher.send(DownMessage(target.actor_id, st.reason if st else None))
 
     def link(self, a: ActorRef, b: ActorRef) -> None:
-        for x, y in ((a, b), (b, a)):
-            st = self._actors.get(x.actor_id)
-            if st is not None and st.alive:
-                with st.lock:
-                    st.links.append(y)
+        """Bidirectional link: built from two one-way halves, each
+        registered (or fired immediately) under the dying side's lock — a
+        link to an actor mid-termination can no longer leave a one-sided
+        link whose ``ExitMessage`` never arrives."""
+        for x in (a, b):
+            if getattr(x, "is_remote", False):
+                x.link(b if x is a else a)
+                return
+        self._link_half(a, b)
+        self._link_half(b, a)
+
+    def _link_half(self, target: ActorRef, listener: ActorRef) -> None:
+        """One-way link registration: when ``target`` dies, ``listener``
+        receives an :class:`ExitMessage`. Re-checks liveness under the
+        target's lock and delivers immediately when the target is already
+        dead (the cross-node link in ``repro.net`` is two such halves)."""
+        st = self._actors.get(target.actor_id)
+        if st is not None:
+            with st.lock:
+                if st.alive:
+                    st.links.append(listener)
+                    return
+        listener.send(ExitMessage(target.actor_id, st.reason if st else None))
 
     # -- scheduling internals ----------------------------------------------
     def _enqueue(self, actor_id: int, msg: Message) -> None:
         st = self._actors.get(actor_id)
-        if st is None or not st.alive:
-            if msg.reply_to is not None:
-                msg.reply_to.set_exception(
-                    ActorFailed(f"actor #{actor_id} is not alive"))
+        delivered = False
+        if st is not None:
+            # liveness re-checked under the lock: a concurrent
+            # _terminate/shutdown() snapshots-and-clears the mailbox under
+            # this lock, so appending after an unlocked check would strand
+            # the message (and its reply future) forever
+            with st.lock:
+                if st.alive:
+                    st.mailbox.append(msg)
+                    delivered = True
+                    self.stats["messages"] += 1
+                    if st.scheduled:
+                        return
+                    st.scheduled = True
+        if not delivered:
+            _safe_set_exception(
+                msg.reply_to, ActorFailed(f"actor #{actor_id} is not alive"))
             return
-        self.stats["messages"] += 1
-        with st.lock:
-            st.mailbox.append(msg)
-            if st.scheduled or not st.alive:
-                return
-            st.scheduled = True
-        self._executor.submit(self._drain, actor_id)
+        try:
+            self._executor.submit(self._drain, actor_id)
+        except RuntimeError:
+            # executor already shut down: drain synchronously so the
+            # mailbox (and any reply futures) cannot be stranded
+            self._drain(actor_id)
 
     def _drain(self, actor_id: int) -> None:
         st = self._actors.get(actor_id)
@@ -255,8 +365,7 @@ class ActorSystem:
                 return
             result = actor.receive(*msg.payload)
         except Exception as exc:  # abnormal termination → fault propagation
-            if msg.reply_to is not None:
-                msg.reply_to.set_exception(exc)
+            _safe_set_exception(msg.reply_to, exc)
             traceback.clear_frames(exc.__traceback__) if exc.__traceback__ else None
             self._terminate(actor_id, exc)
             return
@@ -266,8 +375,7 @@ class ActorSystem:
             # response promise: delegate (paper §3.5)
             _chain_future(result, msg.reply_to)
         else:
-            if not msg.reply_to.cancelled():
-                msg.reply_to.set_result(result)
+            _safe_set_result(msg.reply_to, result)
 
     def _terminate(self, actor_id: int, reason: Any) -> None:
         st = self._actors.get(actor_id)
@@ -282,9 +390,8 @@ class ActorSystem:
             st.mailbox.clear()
             monitors, links = list(st.monitors), list(st.links)
         for msg in pending:
-            if msg.reply_to is not None:
-                msg.reply_to.set_exception(ActorFailed(
-                    f"actor #{actor_id} terminated: {reason!r}"))
+            _safe_set_exception(msg.reply_to, ActorFailed(
+                f"actor #{actor_id} terminated: {reason!r}"))
         try:
             st.actor.on_exit(reason)
         except Exception:  # pragma: no cover - cleanup must not crash runtime
@@ -316,12 +423,41 @@ class ActorSystem:
 
 
 def _chain_future(src: Future, dst: Future) -> None:
-    def _done(f: Future):
-        if dst.cancelled():
-            return
-        exc = f.exception()
-        if exc is not None:
-            dst.set_exception(exc)
-        else:
-            dst.set_result(f.result())
-    src.add_done_callback(_done)
+    """Forward ``src``'s outcome into ``dst`` (promise delegation).
+
+    Cancellation propagates **backwards** (dst → src): a caller that
+    cancels the outer ``request()`` future also cancels the delegated
+    promise, so the in-flight work it represents is not silently leaked.
+    The back-edge is a *weak* reference — a strong one would close a
+    reference cycle with the forward callback and keep chained futures
+    (and the DeviceRefs in their results) alive until a gc pass instead
+    of dropping promptly; while the promise is pending, its owner (the
+    delegate's mailbox) holds it strongly, which is exactly the window
+    where cancelling it matters.
+    Forward resolution guards against a dst that was cancelled between the
+    check and the set (the race is unavoidable — ``Future`` has no
+    compare-and-set), so a lost race never crashes the resolving actor.
+    """
+    src_ref = weakref.ref(src)
+
+    def _src_done(f: Future):
+        try:
+            if f.cancelled():
+                dst.cancel()
+                return
+            exc = f.exception()
+            if exc is not None:
+                _safe_set_exception(dst, exc)
+            else:
+                _safe_set_result(dst, f.result())
+        except InvalidStateError:
+            pass
+
+    def _dst_done(f: Future):
+        if f.cancelled():
+            s = src_ref()
+            if s is not None:
+                s.cancel()
+
+    dst.add_done_callback(_dst_done)
+    src.add_done_callback(_src_done)

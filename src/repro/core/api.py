@@ -374,6 +374,14 @@ class ActorPool:
     holds that data are preferred (zero-copy dispatch), load-ranked among
     themselves.
 
+    Pools are network-transparent: members may be
+    :class:`~repro.net.RemoteActorRef`\\ s (they quack identically and key
+    the routing tables by their ``"<peer>/<id>"`` ids). Off-node refs have
+    no local device, so placement preference never selects them for a
+    device-resident payload — when *no* member matches the payload's
+    device, a round-robin pool falls back to round-robin over everyone
+    (local and remote alike) instead of pretending to know their load.
+
     Quacks like an :class:`ActorRef` (``send``/``request``/``ask``/
     ``is_alive``) and exposes ``.workers``/``.placements`` so it plugs
     directly into :class:`~repro.core.scheduler.ChunkScheduler`.
@@ -439,13 +447,18 @@ class ActorPool:
             if kept:  # exclusion is a preference: never strand a payload
                 live = kept
         pref = payload_device(payload)
+        matched = False
         if pref is not None:
             local = [w for w in live
                      if (d := self._devices.get(w.actor_id)) is not None
                      and d.jax_device == pref]
             if local:
                 live = local
-        if self.policy == "round_robin" and pref is None:
+                matched = True
+        if self.policy == "round_robin" and not matched:
+            # no member holds the payload's data (or the payload carries
+            # none): plain round-robin — off-node members have no local
+            # device/load signal, so load-ranking them would be fiction
             return live[next(self._rr) % len(live)]
 
         def load(w: ActorRef):

@@ -352,12 +352,41 @@ class DeviceRef:
         registry.on_evict(self.device, self.nbytes)
         return self
 
+    def spill_copy(self) -> "DeviceRef":
+        """A spilled **clone** for the wire: serializes the contents into a
+        new picklable host-side ref, leaving this ref device-resident.
+
+        This is the request-payload wire boundary (``repro.net``): the
+        sender keeps its live ref so an exactly-once retry (a chunk
+        re-issued after the receiving *node* died) can replay the same
+        payload locally. Replies use in-place :meth:`spill` instead —
+        there the ref's ownership transfers to the remote caller. Counts
+        one spill either way, so "one spill/unspill pair per wire hop"
+        holds for both directions. Requires read rights, like
+        :meth:`spill`.
+        """
+        self._check_usable()
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; spill_copy() "
+                "serializes the contents and requires 'r'")
+        if self._state == "spilled":
+            host = np.array(self._host)
+        else:
+            host = np.asarray(jax.device_get(self._array))
+        registry.count_spill()
+        return _rebuild_spilled(host, np.dtype(self.dtype).str, self.shape,
+                                self.access)
+
     def unspill(self, device=None) -> "DeviceRef":
         """Move a spilled payload back onto ``device`` (default: where it
-        lived before, or the process default device)."""
+        lived before, or the process default device). Accepts a bare
+        ``jax.Device`` or the runtime's ``Device`` wrapper — the receiving
+        node of a wire transfer passes whichever it routes by."""
         if self._state != "spilled":
             self._check_usable()
             return self
+        device = getattr(device, "jax_device", device)
         self._array = jax.device_put(self._host, device or self.device)
         self._host = None
         self.device = _device_of(self._array)

@@ -94,6 +94,15 @@ class ChunkScheduler:
     placement can never starve it.) Refs in chunk payloads must not be
     *donated* by the kernel: a speculative re-issue would replay a
     consumed ref.
+
+    Workers may live on **other nodes** (:class:`~repro.net.RemoteActorRef`
+    members of a pool). When a remote *node* dies mid-run, every in-flight
+    request to it fails at once and its refs report dead: the failed
+    chunks re-queue and re-issue on surviving workers, and first-completion
+    -wins keeps them exactly-once — the wire format ships request payloads
+    as spill **copies** precisely so the local originals stay live for
+    this replay. A chunk whose payload refs were donated would break that,
+    same as the speculative case above.
     """
 
     def __init__(self, workers, *,

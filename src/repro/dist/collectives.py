@@ -50,12 +50,15 @@ def quantize_ref(x) -> tuple:
     return DeviceRef(q), float(scale)
 
 
-def dequantize_ref(q, scale: float, dtype=jnp.float32) -> DeviceRef:
+def dequantize_ref(q, scale: float, dtype=jnp.float32,
+                   access: str = "rw") -> DeviceRef:
     """Inverse of :func:`quantize_ref`: expand an int8 payload (array or
-    ref) back to a ``dtype`` ref on device. Relative error ≤ 1/254."""
+    ref) back to a ``dtype`` ref on device. Relative error ≤ 1/254.
+    ``access`` restores the original ref's rights (the wire format must
+    not widen a restricted view back to ``rw``)."""
     arr = as_device_array(q)
     deq = (arr.astype(jnp.float32) * jnp.float32(scale)).astype(dtype)
-    return DeviceRef(deq)
+    return DeviceRef(deq, access=access)
 
 
 def compressed_psum(x, axis_name: str):

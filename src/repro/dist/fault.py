@@ -160,13 +160,22 @@ class ElasticDPDriver:
     def __init__(self, system: ActorSystem, grad_fn: Callable, *,
                  n_workers: int = 4,
                  fail_at: Optional[Dict[int, int]] = None,
-                 step_timeout: float = 600.0):
+                 step_timeout: float = 600.0,
+                 workers: Optional[list] = None):
+        """``workers`` adopts pre-spawned gradient workers instead of
+        spawning locally — including :class:`repro.net.RemoteActorRef`\\ s
+        (e.g. from ``NodeRuntime.spawn_remote``): a remote *node* death
+        fails its response futures just like a local worker death, so the
+        elastic re-split covers whole-node loss with no extra code."""
         self.system = system
         self.step_timeout = step_timeout
-        self.workers = [
-            system.spawn(_GradWorker(grad_fn, i, fail_at or {}))
-            for i in range(n_workers)
-        ]
+        if workers is not None:
+            self.workers = list(workers)
+        else:
+            self.workers = [
+                system.spawn(_GradWorker(grad_fn, i, fail_at or {}))
+                for i in range(n_workers)
+            ]
 
     @staticmethod
     def _shard(batch: Dict[str, Any], start: int, size: int):

@@ -474,7 +474,15 @@ class ServeEngine:
     def _heal_pool(self) -> None:
         """Replace crashed replicas in an engine-owned pool (no-op for
         adopted pools). New workers join both the pool and the scheduler's
-        worker set, so the very next step can route to them."""
+        worker set, so the very next step can route to them.
+
+        Adopted pools may contain :class:`repro.net.RemoteActorRef`
+        replicas (decode steps then cross the wire as spill/unspill pairs;
+        the request-side spill *copies*, so a node death mid-step replays
+        the same cache refs on a surviving replica — the engine's
+        exactly-once invariant holds across nodes). Healing such pools is
+        the caller's job: this engine cannot respawn an actor into a
+        process it does not own."""
         if self._behavior is None:
             return
         missing = self._n_workers - len(self.pool.live_workers())

@@ -156,3 +156,124 @@ def test_shutdown_terminates_all(system):
     refs = [system.spawn(lambda x: x) for _ in range(10)]
     system.shutdown()
     assert all(not r.is_alive() for r in refs)
+
+
+# ----------------------------------------------------------------------------
+# fault-propagation races (ISSUE 5 satellites)
+# ----------------------------------------------------------------------------
+def test_monitor_registered_during_terminate_always_delivers(system):
+    """A monitor registered while the target is terminating must still get
+    exactly one DownMessage (the old unlocked liveness check could land
+    after the terminate snapshot and deliver nothing)."""
+    for _ in range(50):
+        target = system.spawn(lambda x: x)
+        inbox, got = [], threading.Event()
+        w = system.spawn(lambda m: (inbox.append(m), got.set()))
+        t = threading.Thread(target=target.exit, args=(None,))
+        t.start()
+        system.monitor(w, target)
+        t.join()
+        assert got.wait(10)
+        assert len(inbox) == 1
+        assert isinstance(inbox[0], DownMessage)
+        assert inbox[0].actor_id == target.actor_id
+
+
+def test_link_to_dying_actor_delivers_exit(system):
+    """Linking to an actor racing into termination must never leave a
+    one-sided link: the living side always receives an ExitMessage."""
+    for _ in range(50):
+        victim = system.spawn(lambda x: x)
+        other = system.spawn(lambda x: x)
+        t = threading.Thread(target=victim.exit, args=("bye",))
+        t.start()
+        system.link(other, victim)
+        t.join()
+        deadline = time.monotonic() + 10
+        while other.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert not other.is_alive()
+
+
+def test_shutdown_concurrent_with_enqueue_strands_no_future(system):
+    """Requests racing a shutdown must all resolve (result or
+    ActorFailed) — the old mailbox-append-after-unlocked-check could
+    strand a reply future forever."""
+    refs = [system.spawn(lambda x: x) for _ in range(4)]
+    futs, stop = [], threading.Event()
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            futs.append(refs[i % len(refs)].request(i))
+            i += 1
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    system.shutdown()
+    stop.set()
+    for t in threads:
+        t.join()
+    for f in futs:
+        try:
+            f.result(timeout=10)   # either a value or ActorFailed — never a hang
+        except ActorFailed:
+            pass
+
+
+def test_ask_uses_system_default_timeout_and_names_actor():
+    """ISSUE 5 satellite: ask() threads ActorSystem.default_ask_timeout
+    and the TimeoutError names the actor id and its liveness."""
+    from concurrent.futures import TimeoutError as FuturesTimeout
+
+    s = ActorSystem(max_workers=2, default_ask_timeout=0.1)
+    try:
+        sleeper = s.spawn(lambda: time.sleep(5))
+        with pytest.raises(FuturesTimeout) as ei:
+            sleeper.ask()
+        msg = str(ei.value)
+        assert f"#{sleeper.actor_id}" in msg
+        assert "alive" in msg
+        assert "0.1" in msg
+        # explicit timeout still wins over the system default
+        fast = s.spawn(lambda x: x)
+        assert fast.ask(1, timeout=10) == 1
+    finally:
+        s.shutdown()
+
+
+def test_chain_future_cancellation_propagates_to_promise(system):
+    """Cancelling the outer request() future cancels the delegated
+    promise instead of leaking the in-flight work."""
+    from concurrent.futures import Future
+
+    promise = Future()
+    delegated = system.spawn(lambda: promise)
+    outer = delegated.request()
+    deadline = time.monotonic() + 10
+    while not promise._done_callbacks and time.monotonic() < deadline:
+        time.sleep(0.005)   # wait for the delegation to be wired up
+    assert outer.cancel()
+    assert promise.cancelled()
+
+
+def test_reply_after_cancel_does_not_crash_actor(system):
+    """A reply future cancelled while the actor is mid-compute must be
+    swallowed when the actor finishes — the set_result on a cancelled
+    future must never crash the resolving actor."""
+    started = threading.Event()
+
+    def slow(x):
+        started.set()
+        time.sleep(0.2)
+        return x
+
+    ref = system.spawn(slow)
+    fut = ref.request(1)
+    assert started.wait(10)
+    assert fut.cancel()          # mailbox futures are never 'running'
+    time.sleep(0.4)              # let the actor finish and try to resolve
+    assert ref.is_alive()
+    assert ref.ask(2, timeout=10) == 2

@@ -224,3 +224,45 @@ def test_deviceref_lifecycle_never_leaks_and_raises_exactly_when_specified(
     gc.collect()
     assert registry.live_bytes() == base_bytes
     assert registry.live_count() == base_refs
+
+
+# -- actor supervision invariants ---------------------------------------------
+@given(n_watchers=st.integers(1, 6), registered_before=st.integers(0, 6))
+@settings(max_examples=15, deadline=None)
+def test_every_monitor_of_terminated_actor_gets_exactly_one_down(
+        n_watchers, registered_before):
+    """Supervision invariant (ISSUE 5): no matter how monitor registration
+    interleaves with termination, every monitor receives exactly one
+    DownMessage — never zero (the lost-registration race) and never two."""
+    import threading
+    import time
+
+    from repro.core import ActorSystem, DownMessage
+
+    registered_before = min(registered_before, n_watchers)
+    system = ActorSystem(max_workers=4)
+    try:
+        target = system.spawn(lambda x: x)
+        inboxes = [[] for _ in range(n_watchers)]
+        events = [threading.Event() for _ in range(n_watchers)]
+
+        def make_watcher(i):
+            return lambda m: (inboxes[i].append(m), events[i].set())
+
+        watchers = [system.spawn(make_watcher(i)) for i in range(n_watchers)]
+        for w in watchers[:registered_before]:
+            system.monitor(w, target)
+        killer = threading.Thread(target=target.exit, args=(None,))
+        killer.start()   # races the remaining registrations
+        for w in watchers[registered_before:]:
+            system.monitor(w, target)
+        killer.join()
+        for evt in events:
+            assert evt.wait(10)
+        time.sleep(0.05)   # grace for (hypothetical) duplicate deliveries
+        for box in inboxes:
+            assert len(box) == 1, box
+            assert isinstance(box[0], DownMessage)
+            assert box[0].actor_id == target.actor_id
+    finally:
+        system.shutdown()
