@@ -1,0 +1,241 @@
+"""Monolithic vs paged serving under mixed prefill/decode load (ISSUE 6).
+
+The workload interleaves a steady stream of short-prompt/short-decode
+requests with long prompts whose prefill costs real wall-clock time
+(simulated by a sleep in the prefill path). The monolithic engine runs
+``init_fn`` inline in the decode loop, so every long prefill stalls all
+in-flight decodes; the paged engine runs prefills on a dedicated worker
+pool and hands page tables to decode by ref handoff, so decode batches
+stay full. Long prompts repeat across a few unique values, so the paged
+pool's prefix cache also demonstrates exactly-once page allocation.
+
+Reported per engine: decode-batch occupancy (filled batch slots / steps ×
+max_batch), the worst inter-step stall, latency percentiles, throughput,
+and the DeviceRef host-traffic deltas (the paged prefill→decode handoff
+must be zero-transfer). Written to ``BENCH_PR6.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.bench_kvpool
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+from .common import emit
+
+MOD = 997
+_MAX_BATCH = 4
+_DECODE_WORKERS = 2
+_PREFILL_WORKERS = 4
+_SHORTS = 24              # short requests: prompt 4 tokens, decode 24
+_SHORT_STEPS = 24
+_LONGS = 8                # long requests: prompt 96 tokens, decode 8
+_LONG_STEPS = 8
+_UNIQUE_LONGS = 2         # longs repeat → prefix sharing
+_PREFILL_SLEEP_S = 0.2    # simulated prefill cost for a long prompt
+_LONG_LEN = 96
+_CAPACITY = 128           # monolithic per-request cache slots
+_ROWS: list = []
+
+
+def _prompts():
+    import numpy as np
+    rng = np.random.default_rng(6)
+    uniques = [rng.integers(0, MOD, size=_LONG_LEN).tolist()
+               for _ in range(_UNIQUE_LONGS)]
+    shorts = [rng.integers(0, MOD, size=4).tolist() for _ in range(_SHORTS)]
+    longs = [uniques[i % _UNIQUE_LONGS] for i in range(_LONGS)]
+    # interleave: a long arrives amid every few shorts, so prefill cost
+    # lands while decodes are active
+    out = []
+    li = 0
+    for i, p in enumerate(shorts):
+        out.append((p, _SHORT_STEPS))
+        if i % 3 == 2 and li < len(longs):
+            out.append((longs[li], _LONG_STEPS))
+            li += 1
+    while li < len(longs):
+        out.append((longs[li], _LONG_STEPS))
+        li += 1
+    return out
+
+
+def _simulate(prompt, steps):
+    h = list(prompt)
+    last = sum(prompt) % MOD
+    out = []
+    for _ in range(steps):
+        nxt = (sum(h) + last) % MOD
+        out.append(nxt)
+        h.append(nxt)
+        last = nxt
+    return out
+
+
+def _is_long(prompt) -> bool:
+    return len(prompt) >= _LONG_LEN
+
+
+def _monolithic_engine(system):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import ServeEngine
+
+    def init_fn(prompt):
+        if _is_long(prompt):
+            time.sleep(_PREFILL_SLEEP_S)   # prefill cost, inline in the loop
+        n = len(prompt)
+        kv = jnp.zeros((_CAPACITY, 1), jnp.float32)
+        kv = kv.at[:n, 0].set(jnp.asarray(np.asarray(prompt, np.float32)))
+        return (kv, jnp.int32(n)), int(sum(prompt) % MOD)
+
+    def step_fn(cache, tokens):
+        kv, lengths = cache                # [B, C, 1], [B]
+        mask = (jnp.arange(_CAPACITY)[None, :]
+                < lengths[:, None]).astype(kv.dtype)
+        s = jnp.sum(kv[..., 0] * mask, axis=1)
+        nxt = (s.astype(jnp.int32) + tokens) % MOD
+        kv = kv.at[jnp.arange(kv.shape[0]), lengths, 0].set(
+            nxt.astype(jnp.float32))
+        return nxt, (kv, lengths + 1)
+
+    return ServeEngine(system, step_fn, init_fn, n_workers=_DECODE_WORKERS,
+                       max_batch=_MAX_BATCH, step_timeout=120.0)
+
+
+def _paged_engine(system):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import PagePool, ServeEngine
+
+    pool = PagePool([((1,), jnp.float32)], page_tokens=16, max_pages=256)
+
+    def prefill_fn(prompt):
+        if _is_long(prompt):
+            time.sleep(_PREFILL_SLEEP_S)   # same cost, off the decode loop
+        arr = jnp.asarray(np.asarray(prompt, np.float32)).reshape(-1, 1)
+        return [arr], int(sum(prompt) % MOD)
+
+    def step_fn(kv, lengths, tokens):
+        k = kv[0]                          # [B, T, 1]
+        T = k.shape[1]
+        mask = (jnp.arange(T)[None, :] < lengths[:, None]).astype(k.dtype)
+        s = jnp.sum(k[..., 0] * mask, axis=1)
+        nxt = (s.astype(jnp.int32) + tokens) % MOD
+        return nxt, [nxt.astype(jnp.float32)[:, None]]
+
+    engine = ServeEngine(system, step_fn=step_fn, cache_pool=pool,
+                         prefill_fn=prefill_fn,
+                         prefill_workers=_PREFILL_WORKERS,
+                         n_workers=_DECODE_WORKERS, max_batch=_MAX_BATCH,
+                         step_timeout=120.0)
+    return engine, pool
+
+
+def _drive(engine, workload) -> dict:
+    from repro.core import memory_stats
+
+    before = memory_stats()
+    t0 = time.perf_counter()
+    futures = []
+    with engine:
+        for prompt, steps in workload:
+            futures.append((prompt, steps,
+                            engine.submit(prompt, max_new_tokens=steps)))
+        results = [(p, s, f.result(timeout=600)) for p, s, f in futures]
+    wall = time.perf_counter() - t0
+    for prompt, steps, res in results:
+        exp = _simulate(prompt, steps)
+        assert res.tokens == exp, "decode mismatch — benchmark invalid"
+    after = memory_stats()
+    stats = engine.stats()
+    toks = sum(s for _, s in workload)
+    lat = stats["latency"]
+    return {
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(toks / wall, 1),
+        "occupancy": round(stats["occupancy"], 3),
+        "max_step_gap_ms": round(stats["max_step_gap_ms"], 1),
+        "steps": stats["steps"],
+        "p50_ms": round(lat["p50_ms"], 2),
+        "p99_ms": round(lat["p99_ms"], 2),
+        "transfers": after["transfers"] - before["transfers"],
+        "readbacks": after["readbacks"] - before["readbacks"],
+        "spills": after["spills"] - before["spills"],
+    }
+
+
+def run() -> None:
+    from repro.core import ActorSystem
+
+    workload = _prompts()
+    with ActorSystem(name="bench-kvpool", max_workers=16) as system:
+        mono = _monolithic_engine(system)
+        row_m = _drive(mono, workload)
+        row_m["engine"] = "monolithic"
+        _ROWS.append(row_m)
+
+        engine, pool = _paged_engine(system)
+        row_p = _drive(engine, workload)
+        row_p["engine"] = "paged"
+        estats = engine.stats()
+        pstats = estats["pool"]
+        row_p["prefix_hits"] = pstats["prefix_hits"]
+        row_p["pages_allocated"] = pstats["allocated"]
+        row_p["cow_pages"] = pstats["cow"]
+        row_p["prefill_dispatch_failed"] = estats["prefill_dispatch"]["failed"]
+        _ROWS.append(row_p)
+
+        # acceptance: zero host transfers on the prefill→decode handoff
+        assert row_p["transfers"] == 0 and row_p["spills"] == 0, \
+            "paged handoff must be transfer-free"
+        # acceptance: decode batches stay full despite the long prefills
+        assert row_p["occupancy"] >= 0.8, \
+            f"paged occupancy {row_p['occupancy']} < 0.8"
+        # acceptance: every repeated long prompt mapped the cached pages —
+        # shared-prefix pages were allocated exactly once
+        assert pstats["prefix_hits"] >= _LONGS - _UNIQUE_LONGS, \
+            "repeated long prompts should hit the prefix cache"
+        pool.evict_prefixes()
+
+    emit("kvpool_mono_stall", row_m["max_step_gap_ms"] * 1e3,
+         f"occupancy={row_m['occupancy']}")
+    emit("kvpool_paged_stall", row_p["max_step_gap_ms"] * 1e3,
+         f"occupancy={row_p['occupancy']} "
+         f"prefix_hits={row_p['prefix_hits']}")
+    _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import jax
+
+    from repro.core import memory_stats
+
+    snap = {
+        "pr": 6,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "workload": {
+            "shorts": _SHORTS, "short_steps": _SHORT_STEPS,
+            "longs": _LONGS, "long_steps": _LONG_STEPS,
+            "unique_longs": _UNIQUE_LONGS, "long_len": _LONG_LEN,
+            "prefill_sleep_s": _PREFILL_SLEEP_S,
+            "max_batch": _MAX_BATCH, "decode_workers": _DECODE_WORKERS,
+            "prefill_workers": _PREFILL_WORKERS,
+        },
+        "engines": _ROWS,
+        "memref": memory_stats(),
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR6.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

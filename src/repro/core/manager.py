@@ -57,6 +57,13 @@ class Device:
         from .memref import registry
         return registry.peak_bytes(self.jax_device)
 
+    def page_stats(self) -> dict:
+        """KV page-pool pressure on this device (aggregated over every
+        :class:`repro.serve.kvpool.PagePool` allocated here): capacity,
+        live/free/shared pages, and the fragmentation ratio."""
+        from .memref import registry
+        return registry.page_stats(self.jax_device)
+
     def _dispatch_started(self):
         with self._lock:
             self._inflight += 1
@@ -143,14 +150,24 @@ class DeviceManager:
             raise LookupError(f"no device for platform={platform!r}")
         return devs[index]
 
-    def memory_stats(self) -> Dict[str, Dict[str, int]]:
+    def memory_stats(self) -> Dict[str, Dict[str, Any]]:
         """Per-device memory watermarks: live DeviceRef bytes, the peak
-        (high watermark), and current dispatch queue depth — the signals
-        the pool's least-loaded policy ranks by."""
-        return {d.name: {"live_bytes": d.live_bytes(),
-                         "peak_bytes": d.peak_bytes(),
-                         "queue_depth": d.queue_depth()}
-                for d in self.devices()}
+        (high watermark), current dispatch queue depth — the signals the
+        pool's least-loaded policy ranks by — plus KV page-pool pressure
+        (``pages_total``/``pages_free``/``pages_shared`` and the
+        fragmentation ratio) wherever a ``repro.serve.kvpool.PagePool``
+        lives on the device."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for d in self.devices():
+            ps = d.page_stats()
+            out[d.name] = {"live_bytes": d.live_bytes(),
+                           "peak_bytes": d.peak_bytes(),
+                           "queue_depth": d.queue_depth(),
+                           "pages_total": ps["pages_total"],
+                           "pages_free": ps["pages_free"],
+                           "pages_shared": ps["pages_shared"],
+                           "fragmentation": ps["fragmentation"]}
+        return out
 
     # -- program / actor creation -------------------------------------------
     def create_program(self, kernels: Dict[str, Callable],

@@ -30,6 +30,7 @@ host-transfer counters the zero-copy tests assert on.
 from __future__ import annotations
 
 import threading
+import weakref
 from typing import Any, Dict, Optional
 
 import jax
@@ -84,6 +85,7 @@ class RefRegistry:
         self._count = 0
         self._bytes: Dict[Any, int] = {}
         self._peak: Dict[Any, int] = {}
+        self._pool_refs: list = []      # weakrefs to live PagePools
         self.transfers = 0
         self.readbacks = 0
         self.spills = 0
@@ -133,6 +135,49 @@ class RefRegistry:
         with self._lock:
             self.unspills += 1
 
+    # -- page pools (repro.serve.kvpool) --------------------------------
+    def register_pool(self, pool) -> None:
+        """Track a page pool (weakly) so page pressure is reported next
+        to the byte watermarks in :func:`memory_stats`."""
+        with self._lock:
+            self._pool_refs.append(weakref.ref(pool))
+            self._pool_refs = [r for r in self._pool_refs
+                               if r() is not None]
+
+    def _live_pools(self, device=None) -> list:
+        with self._lock:
+            pools = [r() for r in self._pool_refs]
+        pools = [p for p in pools if p is not None]
+        if device is None:
+            return pools
+        out = []
+        for p in pools:
+            pdev = getattr(p, "device", None)
+            pdev = getattr(pdev, "jax_device", pdev)  # unwrap manager.Device
+            if pdev is None:
+                # a device-less pool places its refs on the JAX default
+                # device; attribute its pressure there
+                pdev = jax.devices()[0]
+            if pdev == device:
+                out.append(p)
+        return out
+
+    def page_stats(self, device=None) -> dict:
+        """Aggregated page-pool pressure (optionally one device's):
+        capacity, live/free/shared pages, peak, and the internal
+        fragmentation ratio (unused slots inside allocated pages)."""
+        agg = {"pages_total": 0, "pages_live": 0, "pages_free": 0,
+               "pages_shared": 0, "peak_pages": 0}
+        used = slots = 0
+        for pool in self._live_pools(device):
+            s = pool.stats()          # pool lock only; never ours
+            for k in agg:
+                agg[k] += s[k]
+            used += s["used_slots"]
+            slots += s["page_slots"]
+        agg["fragmentation"] = (1.0 - used / slots) if slots else 0.0
+        return agg
+
     # -- queries ------------------------------------------------------
     def live_count(self) -> int:
         return self._count
@@ -151,7 +196,7 @@ class RefRegistry:
 
     def stats(self) -> dict:
         with self._lock:
-            return {
+            base = {
                 "live_refs": self._count,
                 "live_bytes": sum(self._bytes.values()),
                 "peak_bytes": sum(self._peak.values()),
@@ -160,6 +205,12 @@ class RefRegistry:
                 "spills": self.spills,
                 "unspills": self.unspills,
             }
+        pages = self.page_stats()       # own locking (pool locks)
+        base["pages_total"] = pages["pages_total"]
+        base["pages_free"] = pages["pages_free"]
+        base["pages_shared"] = pages["pages_shared"]
+        base["fragmentation"] = pages["fragmentation"]
+        return base
 
     def reset_traffic(self) -> None:
         """Zero the host-traffic counters (not the live accounting)."""
@@ -484,7 +535,7 @@ def _rebuild_spilled(host, dtype_str, shape, access) -> DeviceRef:
 # ----------------------------------------------------------------------------
 # pytree helpers — per-request cache refs (serve engine)
 # ----------------------------------------------------------------------------
-def tree_wrap(tree, device=None, access: str = "rw"):
+def tree_wrap(tree, device=None, access: str = "rw", created=None):
     """Wrap every array leaf of a pytree as a :class:`DeviceRef`.
 
     This is how the serve engine represents per-request decode state: a
@@ -492,6 +543,12 @@ def tree_wrap(tree, device=None, access: str = "rw"):
     registry and kept device-resident between decode steps. Leaves that are
     already refs pass through unchanged; host values are transferred to
     ``device`` first.
+
+    ``created`` (a list, optional) collects every ref this call creates
+    *as it is created* — callers that must release on a mid-tree wrapping
+    failure (one bad leaf after several good ones) release the partial
+    set instead of leaking it; the serve engine's shed path depends on
+    this.
     """
 
     # accept the runtime's Device wrapper as well as a bare jax.Device
@@ -500,7 +557,10 @@ def tree_wrap(tree, device=None, access: str = "rw"):
     def wrap(leaf):
         if isinstance(leaf, DeviceRef):
             return leaf
-        return DeviceRef(as_device_array(leaf, device=device), access=access)
+        ref = DeviceRef(as_device_array(leaf, device=device), access=access)
+        if created is not None:
+            created.append(ref)
+        return ref
 
     return jax.tree.map(wrap, tree)
 
@@ -515,13 +575,22 @@ def tree_unwrap(tree):
 
 def tree_release(tree) -> int:
     """Release every ref leaf in ``tree`` (idempotent); returns how many
-    refs were visited — the serve engine drops a request's whole cache with
-    one call when the request leaves the batch."""
+    refs/pages were visited — the serve engine drops a request's whole
+    cache with one call when the request leaves the batch.
+
+    Besides bare :class:`DeviceRef` leaves this also recognizes objects
+    exposing ``release_pages()`` (a ``repro.serve.kvpool.PageTable``), so
+    the ChunkScheduler's duplicate-success path reclaims a speculative
+    race loser's *paged* cache the same way it reclaims loose refs.
+    """
     n = 0
-    for leaf in jax.tree.leaves(tree, is_leaf=lambda l: isinstance(l, DeviceRef)):
+    is_leaf = lambda l: isinstance(l, DeviceRef) or hasattr(l, "release_pages")
+    for leaf in jax.tree.leaves(tree, is_leaf=is_leaf):
         if isinstance(leaf, DeviceRef):
             leaf.release()
             n += 1
+        elif hasattr(leaf, "release_pages"):
+            n += leaf.release_pages()
     return n
 
 

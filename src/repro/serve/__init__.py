@@ -5,12 +5,16 @@ with deadlines and priorities (:class:`RequestQueue`), formed into
 shape-bucketed dynamic batches (:class:`Batcher`), and decoded
 multi-step by the :class:`ServeEngine`, whose per-request caches stay
 device-resident as :class:`~repro.core.memref.DeviceRef` pytrees between
-steps. See the README's "Serving" section for the engine diagram and the
-SLO/backpressure knobs.
+steps. The paged mode (:class:`PagePool` + ``ServeEngine(cache_pool=...)``)
+disaggregates serving into prefill and decode phases over a page-granular
+KV-cache allocator with copy-free prefix sharing. See the README's
+"Serving" and "Paged KV cache" sections for diagrams and knobs.
 """
 from .batcher import Batcher
 from .engine import (EngineStopped, ServeEngine, make_decode_worker,
                      make_graph_decode_worker)
+from .kvpool import (Page, PagePool, PageTable, PoolExhausted,
+                     make_paged_decode_worker, make_prefill_worker)
 from .request import (AdmissionError, QueueClosed, QueueOverflow, Request,
                       RequestQueue, ServeResult, SLOExceeded)
 from .stats import EWMA, LatencyStats
@@ -19,6 +23,8 @@ __all__ = [
     "Batcher",
     "EngineStopped", "ServeEngine", "make_decode_worker",
     "make_graph_decode_worker",
+    "Page", "PagePool", "PageTable", "PoolExhausted",
+    "make_paged_decode_worker", "make_prefill_worker",
     "AdmissionError", "QueueClosed", "QueueOverflow", "Request",
     "RequestQueue", "ServeResult", "SLOExceeded",
     "EWMA", "LatencyStats",

@@ -67,3 +67,10 @@ class Batcher:
                 break
             batch.append(req)
         return batch
+
+    def take_one(self, *, bucket=None, wait_s: float = 0.0
+                 ) -> Optional[Request]:
+        """Pop a single request without opening a batching window — the
+        prefill stage of a paged engine consumes prompts one at a time
+        (pages need no shape bucketing; batching happens at decode)."""
+        return self.queue.pop(bucket=bucket, timeout=wait_s)

@@ -25,11 +25,25 @@ Workers never donate or mutate incoming cache refs; the engine releases a
 request's previous-step refs only after the step that superseded them
 succeeded. That invariant is what makes mid-batch worker failure
 recoverable by replay.
+
+**Disaggregated paged mode** (``cache_pool=``): instead of a monolithic
+``init_fn`` cache built inline in the decode loop, per-request state
+lives in a :class:`~repro.serve.kvpool.PagePool` and serving splits into
+phases. A prefill worker :class:`~repro.core.api.ActorPool` consumes
+admitted prompts off the batcher, writes their KV pages (reusing shared
+prompt prefixes copy-free), and hands each request's
+:class:`~repro.serve.kvpool.PageTable` to the decode loop by plain ref
+handoff — zero host transfers, and a crashed prefill worker is replayed
+exactly-once through the same ChunkScheduler machinery the decode step
+uses. The decode loop joins prefilled requests into free batch slots the
+moment they are ready, so decode batches stay full while long prefills
+run on the prefill pool instead of stalling the step loop.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -44,6 +58,8 @@ from repro.core.memref import DeviceRef, tree_release, tree_wrap
 from repro.core.scheduler import ChunkScheduler
 
 from .batcher import Batcher
+from .kvpool import (PagePool, PageTable, make_paged_decode_worker,
+                     make_prefill_worker)
 from .request import Request, RequestQueue, ServeResult
 from .stats import LatencyStats
 
@@ -209,6 +225,29 @@ class _Active:
         self.leaves = leaves
         self.treedef = treedef
 
+    prefix_hit = False
+
+    def release(self) -> None:
+        for ref in self.leaves:
+            ref.release()
+        self.leaves = []
+
+
+class _ActivePaged:
+    """A request resident in the running batch of a paged engine: its
+    queue entry plus its page table (the pages live in the engine's
+    :class:`~repro.serve.kvpool.PagePool`)."""
+
+    __slots__ = ("req", "table", "prefix_hit")
+
+    def __init__(self, req: Request, table: PageTable, prefix_hit: bool):
+        self.req = req
+        self.table = table
+        self.prefix_hit = prefix_hit
+
+    def release(self) -> None:
+        self.table.release_pages()
+
 
 # ----------------------------------------------------------------------------
 # the engine
@@ -216,12 +255,27 @@ class _Active:
 class ServeEngine:
     """Asynchronous continuous-batching request engine.
 
-    ``init_fn(prompt) → (cache_pytree, first_token)`` builds one request's
-    decode state; ``step_fn(cache, tokens[B]) → (next_tokens[B],
-    new_cache)`` advances a whole batch one token. The engine owns a
-    worker pool (or adopts one via ``pool=``), an admission
-    :class:`RequestQueue`, and a :class:`Batcher`; ``submit()`` is the
-    client surface, ``stats()`` the observability surface.
+    **Monolithic mode** (default): ``init_fn(prompt) → (cache_pytree,
+    first_token)`` builds one request's decode state inline in the decode
+    loop; ``step_fn(cache, tokens[B]) → (next_tokens[B], new_cache)``
+    advances a whole batch one token. The engine owns a worker pool (or
+    adopts one via ``pool=``), an admission :class:`RequestQueue`, and a
+    :class:`Batcher`; ``submit()`` is the client surface, ``stats()`` the
+    observability surface.
+
+    **Paged mode** (``cache_pool=`` a
+    :class:`~repro.serve.kvpool.PagePool`): serving disaggregates into a
+    prefill phase and a decode phase. ``prefill_fn(prompt) → (entries,
+    first_token)`` (entry leaves ``[T, *per_token]``) runs on a dedicated
+    prefill worker pool driven by ``prefill_workers`` threads, each
+    dispatching through its own ChunkScheduler chunk so a crashed prefill
+    worker replays exactly-once; ``step_fn(kv, lengths, tokens) →
+    (next_tokens, entries)`` is the paged decode contract
+    (:func:`~repro.serve.kvpool.make_paged_decode_worker`). Prefilled
+    requests hand their page tables to the decode loop by in-process ref
+    handoff (zero host transfers) and join the running batch immediately,
+    so long prefills never stall the decode step; identical prompts map
+    the same read-sealed pages through the pool's prefix cache.
 
     ``allow_join=False`` degrades to gang scheduling — a batch runs to
     completion before the next forms. Models whose cache carries
@@ -232,6 +286,10 @@ class ServeEngine:
     def __init__(self, system: ActorSystem, step_fn: Optional[Callable] = None,
                  init_fn: Optional[Callable] = None, *,
                  step_graph=None,
+                 cache_pool: Optional[PagePool] = None,
+                 prefill_fn: Optional[Callable] = None,
+                 prefill_workers: int = 2,
+                 share_prefixes: bool = True,
                  pool: Optional[ActorPool] = None, n_workers: int = 2,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
                  allow_join: bool = True, max_attempts: int = 3,
@@ -239,24 +297,63 @@ class ServeEngine:
                  queue: Optional[RequestQueue] = None, device=None,
                  combine: Optional[Callable] = None,
                  split: Optional[Callable] = None):
-        if init_fn is None:
-            raise ValueError("init_fn is required (per-request cache setup)")
-        if step_fn is not None and step_graph is not None:
-            raise ValueError("pass step_fn or step_graph, not both")
-        if pool is not None and (step_fn is not None
-                                 or step_graph is not None):
-            raise ValueError(
-                "an adopted pool brings its own decode behavior; "
-                "step_fn/step_graph would be silently ignored — pass one "
-                "or the other")
-        behavior = None
-        if pool is None:
-            if step_fn is None and step_graph is None:
+        self._paged = cache_pool is not None
+        if self._paged:
+            if prefill_fn is None:
                 raise ValueError(
-                    "need step_fn or step_graph when no pool is supplied")
+                    "cache_pool mode needs prefill_fn (prompt → (entries, "
+                    "first_token)); init_fn is the monolithic path")
+            if init_fn is not None:
+                raise ValueError(
+                    "pass init_fn (monolithic) or cache_pool+prefill_fn "
+                    "(paged), not both")
+            if step_fn is None or step_graph is not None:
+                raise ValueError(
+                    "cache_pool mode needs a paged step_fn "
+                    "(kv, lengths, tokens) → (next_tokens, entries)")
+            if pool is not None:
+                raise ValueError(
+                    "cache_pool mode builds its own prefill/decode pools; "
+                    "adopted pools are a monolithic-mode feature")
+        else:
+            if init_fn is None:
+                raise ValueError(
+                    "init_fn is required (per-request cache setup)")
+            if step_fn is not None and step_graph is not None:
+                raise ValueError("pass step_fn or step_graph, not both")
+            if pool is not None and (step_fn is not None
+                                     or step_graph is not None):
+                raise ValueError(
+                    "an adopted pool brings its own decode behavior; "
+                    "step_fn/step_graph would be silently ignored — pass "
+                    "one or the other")
+        behavior = None
+        self._prefill_behavior = None
+        self._prefill_workers = 0
+        self.prefill_pool: Optional[ActorPool] = None
+        self._prefill_scheduler: Optional[ChunkScheduler] = None
+        if pool is None:
             if device is None:
                 device = system.opencl_manager().find_device()
-            if step_graph is not None:
+            if self._paged:
+                behavior = make_paged_decode_worker(step_fn, cache_pool)
+                self._prefill_behavior = make_prefill_worker(
+                    prefill_fn, cache_pool, share_prefixes=share_prefixes)
+                self._prefill_workers = max(1, int(prefill_workers))
+                prefill_refs = [system.spawn(self._prefill_behavior)
+                                for _ in range(self._prefill_workers)]
+                self.prefill_pool = ActorPool(
+                    system, prefill_refs, policy="round_robin",
+                    devices=[device] * len(prefill_refs))
+                # straggler speculation stays off: a duplicated prefill
+                # would burn compute and allocate a second page set (the
+                # scheduler reclaims the loser via tree_release, but the
+                # work is wasted); crash *replay* — the exactly-once path
+                # this scheduler exists for — does not need it
+                self._prefill_scheduler = ChunkScheduler(
+                    self.prefill_pool, max_attempts=max_attempts,
+                    straggler_factor=float("inf"))
+            elif step_graph is not None:
                 # the model step is a built dataflow graph (multi-kernel
                 # DAG); replicas share the graph's node actors, so the
                 # pool here buys step pipelining + crash replay, not
@@ -283,6 +380,7 @@ class ServeEngine:
         self.pool = pool
         self.device = device
         self.init_fn = init_fn
+        self.cache_pool = cache_pool
         self.queue = queue if queue is not None else RequestQueue()
         self.batcher = Batcher(self.queue, max_batch=max_batch,
                                max_wait_ms=max_wait_ms)
@@ -295,12 +393,27 @@ class ServeEngine:
         self._counters: Dict[str, int] = {
             "steps": 0, "tokens": 0, "joined": 0, "left": 0,
             "completed": 0, "failed": 0, "expired": 0, "requeues": 0,
-            "respawned": 0, "peak_batch": 0,
+            "respawned": 0, "peak_batch": 0, "batch_slots": 0,
+            "prefills": 0, "prefix_hits": 0, "respawned_prefill": 0,
         }
+        # prefill threads and the decode loop both bump shared counters
+        self._ct_lock = threading.Lock()
+        self._max_step_gap = 0.0
+        self._last_step_end: Optional[float] = None
         self._clock = time.monotonic
         self._stop = threading.Event()
         self._drain = True
         self._thread: Optional[threading.Thread] = None
+        # paged handoff: prefill threads publish (req, table, first_token,
+        # prefix_hit) here; the decode loop joins them into free slots
+        self._ready: deque = deque()
+        self._ready_cv = threading.Condition()
+        self._prefill_inflight = 0
+        self._prefill_threads: List[threading.Thread] = []
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._ct_lock:
+            self._counters[key] += n
 
     # -- client surface ----------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 8, priority: int = 0,
@@ -318,6 +431,13 @@ class ServeEngine:
     def start(self) -> "ServeEngine":
         if self._thread is not None:
             raise RuntimeError("engine already started")
+        if self._paged:
+            self._prefill_threads = [
+                threading.Thread(target=self._prefill_loop,
+                                 name=f"serve-prefill-{i}", daemon=True)
+                for i in range(self._prefill_workers)]
+            for t in self._prefill_threads:
+                t.start()
         self._thread = threading.Thread(target=self._loop,
                                         name="serve-engine", daemon=True)
         self._thread.start()
@@ -332,8 +452,12 @@ class ServeEngine:
         self.queue.close()
         self._drain = drain
         self._stop.set()
+        with self._ready_cv:
+            self._ready_cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout)
+        for t in self._prefill_threads:
+            t.join(timeout)
 
     def __enter__(self) -> "ServeEngine":
         return self.start()
@@ -343,20 +467,32 @@ class ServeEngine:
         return False
 
     def stats(self) -> Dict[str, Any]:
-        s: Dict[str, Any] = dict(self._counters)
+        with self._ct_lock:
+            s: Dict[str, Any] = dict(self._counters)
         s["shed"] = self.queue.shed
         s["admitted"] = self.queue.admitted
         s["queue_depth"] = len(self.queue)
         s["latency"] = self.latency.summary()
         s["ttft"] = self.ttft.summary()
         s["dispatch"] = dict(self._scheduler.stats)
+        s["max_step_gap_ms"] = self._max_step_gap * 1e3
+        #: fraction of decode-batch slots filled, over every step taken —
+        #: the disaggregation win is this staying high under mixed load
+        s["occupancy"] = (s["batch_slots"] / (s["steps"] * self.max_batch)
+                          if s["steps"] else 0.0)
+        if self._paged:
+            s["prefill_dispatch"] = dict(self._prefill_scheduler.stats)
+            s["pool"] = self.cache_pool.stats()
         return s
 
     # -- engine loop -------------------------------------------------------
     def _loop(self) -> None:
-        active: List[_Active] = []
+        active: list = []
         try:
-            self._serve(active)
+            if self._paged:
+                self._serve_paged(active)
+            else:
+                self._serve(active)
         except BaseException as exc:  # defensive: never die silently
             for a in list(active):
                 self._leave(a, active, error=exc)
@@ -399,21 +535,39 @@ class ServeEngine:
     def _admit(self, req: Request, active: List[_Active]) -> None:
         now = self._clock()
         if req.deadline is not None and req.deadline <= now:
-            self._counters["expired"] += 1
+            self._bump("expired")
             if not req.future.done():
                 req.future.set_exception(DeadlineExceeded(
                     f"request {req.id} expired while queued"))
             return
+        created: List[DeviceRef] = []
         try:
             cache, first_token = self.init_fn(req.prompt)
-            refs = tree_wrap(cache, device=self.device)
+            refs = tree_wrap(cache, device=self.device, created=created)
         except Exception as exc:
-            # a bad prompt fails its own request, never the engine
-            self._counters["failed"] += 1
+            # a bad prompt fails its own request, never the engine — and
+            # a wrap that died mid-tree (one bad leaf after several good
+            # ones) must not leak the refs already created (shed-path
+            # leak regression)
+            for ref in created:
+                ref.release()
+            self._bump("failed")
             if not req.future.done():
                 req.future.set_exception(exc)
             return
         leaves, treedef = jax.tree_util.tree_flatten(refs)
+        # init_fn may be a long prefill: re-check the deadline *after* it
+        # ran and release the just-built cache on the shed path instead
+        # of parking it in the batch for a doomed decode step
+        now = self._clock()
+        if req.deadline is not None and req.deadline <= now:
+            for ref in leaves:
+                ref.release()
+            self._bump("expired")
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request {req.id} expired during cache init"))
+            return
         if active:
             # the prompt-shape bucket is only a proxy for cache
             # compatibility; verify the real invariant so one malformed
@@ -425,7 +579,7 @@ class ServeEngine:
                     [(l.shape, l.dtype) for l in seed.leaves]:
                 for ref in leaves:
                     ref.release()
-                self._counters["failed"] += 1
+                self._bump("failed")
                 if not req.future.done():
                     req.future.set_exception(ValueError(
                         f"request {req.id}: cache structure does not match "
@@ -434,39 +588,39 @@ class ServeEngine:
                 return
         req.last_token = first_token
         active.append(_Active(req, leaves, treedef))
-        self._counters["joined"] += 1
-        self._counters["peak_batch"] = max(self._counters["peak_batch"],
-                                           len(active))
+        self._bump("joined")
+        with self._ct_lock:
+            self._counters["peak_batch"] = max(self._counters["peak_batch"],
+                                               len(active))
 
-    def _leave(self, a: _Active, active: List[_Active],
+    def _leave(self, a, active: list,
                error: Optional[BaseException] = None) -> None:
-        for ref in a.leaves:
-            ref.release()
-        a.leaves = []
+        a.release()
         active.remove(a)
-        self._counters["left"] += 1
+        self._bump("left")
         req = a.req
         if error is not None:
-            self._counters["failed"] += 1
+            self._bump("failed")
             if not req.future.done():
                 req.future.set_exception(error)
             return
         now = self._clock()
         lat = now - req.t_submit
         self.latency.record(lat)
-        self._counters["completed"] += 1
+        self._bump("completed")
         ttft = (req.t_first - req.t_submit
                 if req.t_first is not None else lat)
         if not req.future.done():
             req.future.set_result(ServeResult(
                 request_id=req.id, tokens=list(req.tokens), latency_s=lat,
-                ttft_s=ttft, steps=len(req.tokens)))
+                ttft_s=ttft, steps=len(req.tokens),
+                prefix_hit=getattr(a, "prefix_hit", False)))
 
-    def _expire(self, active: List[_Active]) -> None:
+    def _expire(self, active: list) -> None:
         now = self._clock()
         for a in list(active):
             if a.req.deadline is not None and now > a.req.deadline:
-                self._counters["expired"] += 1
+                self._bump("expired")
                 self._leave(a, active, error=DeadlineExceeded(
                     f"request {a.req.id} missed its deadline mid-decode "
                     f"after {len(a.req.tokens)} tokens"))
@@ -490,11 +644,31 @@ class ServeEngine:
             ref = self.system.spawn(self._behavior)
             self.pool.add_worker(ref, self.device)
             self._scheduler.add_worker(ref)
-            self._counters["respawned"] += 1
+            self._bump("respawned")
+
+    def _heal_prefill(self) -> None:
+        """Same self-healing for the engine-owned prefill pool: a prefill
+        worker killed by a crash (or a poison prompt) is replaced before
+        the next prefill dispatch."""
+        if self._prefill_behavior is None:
+            return
+        missing = self._prefill_workers - len(self.prefill_pool.live_workers())
+        for _ in range(missing):
+            ref = self.system.spawn(self._prefill_behavior)
+            self.prefill_pool.add_worker(ref, self.device)
+            self._prefill_scheduler.add_worker(ref)
+            self._bump("respawned_prefill")
+
+    def _note_step_gap(self) -> None:
+        now = self._clock()
+        if self._last_step_end is not None:
+            self._max_step_gap = max(self._max_step_gap,
+                                     now - self._last_step_end)
 
     # -- one decode step ---------------------------------------------------
     def _step(self, active: List[_Active]) -> None:
         self._heal_pool()
+        self._note_step_gap()
         payload = ("step",
                    tuple(a.req.last_token for a in active),
                    tuple(tuple(a.leaves) for a in active),
@@ -510,17 +684,20 @@ class ServeEngine:
         except Exception as exc:
             # permanent failure: every member surfaces it per-request;
             # the engine itself keeps serving
-            self._counters["requeues"] += \
-                self._scheduler.stats["failed"] - failed_before
+            self._bump("requeues",
+                       self._scheduler.stats["failed"] - failed_before)
             for a in list(active):
                 self._leave(a, active, error=exc)
+            self._last_step_end = self._clock()
             return
-        self._counters["requeues"] += \
-            self._scheduler.stats["failed"] - failed_before
+        self._bump("requeues",
+                   self._scheduler.stats["failed"] - failed_before)
         self.queue.note_service_time(self._clock() - t0)
-        self._counters["steps"] += 1
+        self._bump("steps")
+        self._bump("batch_slots", len(active))
         tokens, new_caches = result
         now = self._clock()
+        self._last_step_end = now
         for a, tok, new_leaves in zip(list(active), tokens, new_caches):
             for old in a.leaves:
                 old.release()
@@ -528,7 +705,179 @@ class ServeEngine:
             token = tok.item() if hasattr(tok, "item") else tok
             a.req.tokens.append(token)
             a.req.last_token = token
-            self._counters["tokens"] += 1
+            self._bump("tokens")
+            if a.req.t_first is None:
+                a.req.t_first = now
+                self.ttft.record(now - a.req.t_submit)
+            if len(a.req.tokens) >= a.req.max_new_tokens:
+                self._leave(a, active)
+
+    # ------------------------------------------------------------------
+    # paged mode: prefill threads + the paged decode loop
+    # ------------------------------------------------------------------
+    def _prefill_loop(self) -> None:
+        """One prefill thread: pull a prompt off the batcher, prefill it
+        through the ChunkScheduler (exactly-once replay of a crashed
+        prefill worker), and publish the page table to the decode loop.
+        ``prefill_workers`` of these run concurrently, so several long
+        prefills overlap each other *and* the decode steps."""
+        while True:
+            if self._stop.is_set() and not self._drain:
+                return
+            with self._ready_cv:
+                self._prefill_inflight += 1
+            try:
+                req = self.batcher.take_one(wait_s=0.05)
+                if req is None:
+                    if self.queue.closed and len(self.queue) == 0:
+                        return
+                    continue
+                self._do_prefill(req)
+            finally:
+                with self._ready_cv:
+                    self._prefill_inflight -= 1
+                    self._ready_cv.notify_all()
+
+    def _do_prefill(self, req: Request) -> None:
+        now = self._clock()
+        if req.deadline is not None and req.deadline <= now:
+            self._bump("expired")
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request {req.id} expired while queued for prefill"))
+            return
+        self._heal_prefill()
+        try:
+            table, first, hit = self._prefill_scheduler.run(
+                [("prefill", req.prompt)], timeout=self.step_timeout)[0]
+        except Exception as exc:
+            self._bump("failed")
+            if not req.future.done():
+                req.future.set_exception(exc)
+            return
+        self._bump("prefills")
+        if hit:
+            self._bump("prefix_hits")
+        req.t_ready = self._clock()
+        # shed-path page return: a request whose deadline passed *during*
+        # prefill hands its pages straight back to the pool instead of
+        # leaking them into a batch it can never finish in
+        if req.deadline is not None and req.deadline <= req.t_ready:
+            table.release_pages()
+            self._bump("expired")
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request {req.id} expired during prefill"))
+            return
+        with self._ready_cv:
+            self._ready.append((req, table, first, hit))
+            self._ready_cv.notify_all()
+
+    def _take_ready(self, n: int, wait: bool) -> list:
+        with self._ready_cv:
+            if wait and not self._ready and not self._stop.is_set():
+                self._ready_cv.wait(timeout=0.02)
+            out = []
+            while self._ready and len(out) < n:
+                out.append(self._ready.popleft())
+            return out
+
+    def _abandon_ready(self) -> None:
+        with self._ready_cv:
+            entries = list(self._ready)
+            self._ready.clear()
+        for req, table, _first, _hit in entries:
+            table.release_pages()
+            if not req.future.done():
+                req.future.set_exception(
+                    EngineStopped("engine stopped before serving request"))
+
+    def _paged_idle(self) -> bool:
+        with self._ready_cv:
+            return (len(self.queue) == 0 and self._prefill_inflight == 0
+                    and not self._ready)
+
+    def _serve_paged(self, active: List[_ActivePaged]) -> None:
+        while True:
+            if self._stop.is_set() and not self._drain:
+                self._abandon_queue()
+                self._abandon_ready()
+            free = self.max_batch - len(active)
+            if free > 0:
+                for req, table, first, hit in self._take_ready(
+                        free, wait=not active):
+                    self._admit_paged(req, table, first, hit, active)
+            if not active:
+                if self._stop.is_set() and self._paged_idle():
+                    return
+                if self._stop.is_set() and not self._drain:
+                    return
+                continue  # _take_ready waited for work above
+            self._expire(active)
+            if active:
+                self._step_paged(active)
+
+    def _admit_paged(self, req: Request, table: PageTable, first,
+                     hit: bool, active: List[_ActivePaged]) -> None:
+        now = self._clock()
+        if req.deadline is not None and req.deadline <= now:
+            table.release_pages()
+            self._bump("expired")
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(
+                    f"request {req.id} expired between prefill and join"))
+            return
+        req.last_token = first
+        active.append(_ActivePaged(req, table, hit))
+        self._bump("joined")
+        with self._ct_lock:
+            self._counters["peak_batch"] = max(self._counters["peak_batch"],
+                                               len(active))
+
+    def _step_paged(self, active: List[_ActivePaged]) -> None:
+        self._heal_pool()
+        self._note_step_gap()
+        # reserve every request's append slot *before* dispatch: page
+        # allocation at a boundary, copy-on-write when the tail is a
+        # shared prefix page — so the worker only ever writes private
+        # tails, and a replayed step re-reads unmodified pages
+        for a in list(active):
+            try:
+                a.table.prepare_append()
+            except Exception as exc:   # PoolExhausted: shed this request
+                self._leave(a, active, error=exc)
+        if not active:
+            return
+        payload = ("pstep",
+                   tuple(a.req.last_token for a in active),
+                   tuple((tuple(a.table.pages), a.table.length)
+                         for a in active))
+        failed_before = self._scheduler.stats["failed"]
+        t0 = self._clock()
+        try:
+            result = self._scheduler.run([payload],
+                                         timeout=self.step_timeout)[0]
+        except Exception as exc:
+            self._bump("requeues",
+                       self._scheduler.stats["failed"] - failed_before)
+            for a in list(active):
+                self._leave(a, active, error=exc)
+            self._last_step_end = self._clock()
+            return
+        self._bump("requeues",
+                   self._scheduler.stats["failed"] - failed_before)
+        self.queue.note_service_time(self._clock() - t0)
+        self._bump("steps")
+        self._bump("batch_slots", len(active))
+        tokens, new_tails = result
+        now = self._clock()
+        self._last_step_end = now
+        for a, tok, tail_arrays in zip(list(active), tokens, new_tails):
+            a.table.commit_append(tail_arrays)
+            token = tok.item() if hasattr(tok, "item") else tok
+            a.req.tokens.append(token)
+            a.req.last_token = token
+            self._bump("tokens")
             if a.req.t_first is None:
                 a.req.t_first = now
                 self.ttft.record(now - a.req.t_submit)

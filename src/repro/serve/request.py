@@ -62,6 +62,8 @@ class ServeResult:
     latency_s: float          # submit → last token
     ttft_s: float             # submit → first token
     steps: int = 0            # decode steps this request participated in
+    prefix_hit: bool = False  # paged engine: prefill served from the
+                              # pool's shared-prefix cache (no KV compute)
 
 
 class Request:
@@ -71,7 +73,7 @@ class Request:
 
     __slots__ = ("id", "prompt", "max_new_tokens", "priority", "deadline",
                  "bucket", "future", "tokens", "last_token", "t_submit",
-                 "t_first")
+                 "t_first", "t_ready")
 
     def __init__(self, prompt, *, max_new_tokens: int = 8, priority: int = 0,
                  deadline: Optional[float] = None, bucket=None):
@@ -91,6 +93,9 @@ class Request:
         self.last_token: Any = None
         self.t_submit = time.monotonic()
         self.t_first: Optional[float] = None
+        #: paged engine: when prefill finished and the page table became
+        #: ready for decode (None in monolithic mode)
+        self.t_ready: Optional[float] = None
 
     def __repr__(self):
         return (f"Request#{self.id}(bucket={self.bucket}, "

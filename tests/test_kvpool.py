@@ -1,0 +1,388 @@
+"""Paged KV-cache pool + disaggregated prefill/decode (ISSUE 6 surface).
+
+Covers: page alloc/release accounting against the DeviceRef registry,
+write_pages/gather roundtrips, page-table two-phase append (boundary
+allocation, copy-on-write at a shared tail), prefix sharing (same Page
+objects, exactly-once allocation, pin survival and eviction), the
+prefix-safety guarantees (AccessViolation on a sealed write — both
+directly and through the decode worker — and COW divergence leaving the
+sibling's pages byte-identical), the paged ServeEngine end-to-end (zero
+host transfers on the prefill→decode handoff), exactly-once replay of a
+crashed prefill worker, and the page-pressure fields in
+``DeviceManager.memory_stats()``.
+"""
+import gc
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AccessViolation, ActorSystem, live_ref_count,
+                        transfer_count)
+from repro.core.memref import tree_release
+from repro.serve import (PagePool, PageTable, PoolExhausted, ServeEngine,
+                         make_paged_decode_worker, make_prefill_worker)
+
+
+@pytest.fixture(scope="module")
+def system():
+    s = ActorSystem(max_workers=8)
+    yield s
+    s.shutdown()
+
+
+def ref_baseline():
+    """Live-ref baseline for leak checks (GC first: other test modules may
+    have dropped refs whose __del__ hasn't run yet)."""
+    gc.collect()
+    return live_ref_count()
+
+
+def assert_refs_settle(baseline: int, timeout: float = 5.0) -> None:
+    """Leak check that tolerates in-flight releases (stray done-callbacks
+    from earlier test modules may still be draining): poll with GC instead
+    of sampling once. A real leak still fails — the count never comes back
+    down to the baseline."""
+    deadline = time.monotonic() + timeout
+    while True:
+        gc.collect()
+        n = live_ref_count()
+        if n <= baseline:
+            return
+        if time.monotonic() > deadline:
+            assert n == baseline, f"{n - baseline} DeviceRefs leaked"
+        time.sleep(0.02)
+
+
+# ----------------------------------------------------------------------------
+# toy paged model: single leaf [T, 1] holding the token value as float;
+# next token = (sum of context + last token) mod 997
+# ----------------------------------------------------------------------------
+MOD = 997
+
+
+def toy_prefill(prompt):
+    arr = jnp.asarray(np.asarray(prompt, dtype=np.float32)).reshape(-1, 1)
+    return [arr], int(np.sum(np.asarray(prompt)) % MOD)
+
+
+def toy_paged_step(kv, lengths, tokens):
+    k = kv[0]  # [B, T, 1]
+    T = k.shape[1]
+    mask = (jnp.arange(T)[None, :] < lengths[:, None]).astype(k.dtype)
+    s = jnp.sum(k[..., 0] * mask, axis=1)
+    nxt = (s.astype(jnp.int32) + tokens) % MOD
+    return nxt, [nxt.astype(jnp.float32)[:, None]]
+
+
+def simulate(prompt, steps):
+    h = list(prompt)
+    last = sum(prompt) % MOD
+    out = []
+    for _ in range(steps):
+        nxt = (sum(h) + last) % MOD
+        out.append(nxt)
+        h.append(nxt)
+        last = nxt
+    return out
+
+
+def make_pool(**kw):
+    kw.setdefault("page_tokens", 4)
+    kw.setdefault("max_pages", 64)
+    return PagePool([((1,), jnp.float32)], **kw)
+
+
+# ----------------------------------------------------------------------------
+# pool allocation / accounting
+# ----------------------------------------------------------------------------
+def test_alloc_release_accounting():
+    base = ref_baseline()
+    pool = make_pool()
+    pages = [pool.alloc_page() for _ in range(3)]
+    st = pool.stats()
+    assert st["pages_live"] == 3
+    assert st["pages_free"] == pool.max_pages - 3
+    assert st["allocated"] == 3
+    assert live_ref_count() == base + 3  # one leaf per page
+    pool.release_pages(pages)
+    st = pool.stats()
+    assert st["pages_live"] == 0
+    assert st["freed"] == 3
+    assert st["peak_pages"] == 3
+    assert_refs_settle(base)
+
+
+def test_release_is_idempotent():
+    pool = make_pool()
+    page = pool.alloc_page()
+    pool.release_page(page)
+    pool.release_page(page)  # double release must not underflow
+    assert pool.stats()["pages_live"] == 0
+    assert pool.stats()["freed"] == 1
+
+
+def test_pool_exhausted_raises():
+    pool = make_pool(max_pages=2)
+    pages = [pool.alloc_page(), pool.alloc_page()]
+    with pytest.raises(PoolExhausted):
+        pool.alloc_page()
+    pool.release_pages(pages)
+    pool.alloc_page()  # space again after release
+
+
+def test_write_pages_gather_roundtrip():
+    base = ref_baseline()
+    pool = make_pool(page_tokens=4)
+    vals = np.arange(10, dtype=np.float32).reshape(-1, 1)
+    pages, length = pool.write_pages([jnp.asarray(vals)])
+    assert length == 10
+    assert len(pages) == 3           # ceil(10 / 4)
+    assert [p.used for p in pages] == [4, 4, 2]
+    table = PageTable(pool, pages=pages, length=length)
+    (got,) = table.gather()
+    np.testing.assert_array_equal(np.asarray(got[:10]), vals)
+    np.testing.assert_array_equal(np.asarray(got[10:]),
+                                  np.zeros((2, 1), np.float32))
+    # partial tail page ⇒ internal fragmentation is visible
+    assert 0.0 < pool.stats()["fragmentation"] < 1.0
+    table.release_pages()
+    assert_refs_settle(base)
+
+
+def test_prepare_append_allocates_at_boundary():
+    pool = make_pool(page_tokens=4)
+    pages, length = pool.write_pages(
+        [jnp.zeros((4, 1), jnp.float32)])      # exactly one full page
+    table = PageTable(pool, pages=pages, length=length)
+    assert table.capacity == 4
+    tail, off = table.prepare_append()
+    assert len(table.pages) == 2 and off == 0  # fresh page, offset 0
+    table.commit_append([jnp.ones((4, 1), jnp.float32)])
+    assert table.length == 5
+    tail, off = table.prepare_append()
+    assert len(table.pages) == 2 and off == 1  # same page, next slot
+    table.release_pages()
+
+
+def test_tree_release_recognizes_page_tables():
+    # the ChunkScheduler reclaims a speculative-race loser's payload via
+    # tree_release; a prefill result carrying a PageTable must be
+    # reclaimed like any DeviceRef payload
+    base = ref_baseline()
+    pool = make_pool()
+    pages, length = pool.write_pages([jnp.zeros((6, 1), jnp.float32)])
+    table = PageTable(pool, pages=pages, length=length)
+    tree_release((table, 7, False))
+    assert pool.stats()["pages_live"] == 0
+    assert_refs_settle(base)
+
+
+# ----------------------------------------------------------------------------
+# prefix sharing: exactly-once allocation, sealing, eviction
+# ----------------------------------------------------------------------------
+def test_prefix_sharing_maps_same_pages_exactly_once():
+    base = ref_baseline()
+    pool = make_pool()
+    prefill = make_prefill_worker(toy_prefill, pool)
+    prompt = [3, 1, 4, 1, 5, 9]
+    t1, first1, hit1 = prefill("prefill", prompt)
+    t2, first2, hit2 = prefill("prefill", prompt)
+    assert (hit1, hit2) == (False, True)
+    assert first1 == first2 == sum(prompt) % MOD
+    # the *same* Page objects — shared, not duplicated
+    assert [id(p) for p in t1.pages] == [id(p) for p in t2.pages]
+    st = pool.stats()
+    assert st["allocated"] == len(t1.pages)   # allocated exactly once
+    assert st["prefix_hits"] == 1
+    assert st["pages_shared"] == len(t1.pages)
+    assert all(p.sealed for p in t1.pages)
+    # both requests finish: pages survive via the prefix-cache pin
+    t1.release_pages()
+    t2.release_pages()
+    assert pool.stats()["pages_live"] == len(pool._prefix[
+        pool.prefix_key(prompt)].pages)
+    assert pool.evict_prefixes() == 1
+    assert pool.stats()["pages_live"] == 0
+    assert_refs_settle(base)
+
+
+def test_prefix_cache_lru_cap():
+    pool = make_pool(max_prefixes=2)
+    prefill = make_prefill_worker(toy_prefill, pool)
+    tables = [prefill("prefill", [i, i])[0] for i in range(3)]
+    assert pool.stats()["prefix_entries"] == 2
+    assert pool.stats()["prefix_evicted"] == 1
+    for t in tables:
+        t.release_pages()
+    pool.evict_prefixes()
+
+
+def test_allocation_pressure_evicts_idle_prefixes():
+    pool = make_pool(page_tokens=4, max_pages=1)
+    prefill = make_prefill_worker(toy_prefill, pool)
+    t1, _, _ = prefill("prefill", [1, 2])
+    t1.release_pages()                 # now held only by the cache pin
+    assert pool.stats()["pages_live"] == 1
+    t2, _, _ = prefill("prefill", [5, 6])   # needs space → evicts idle entry
+    assert pool.stats()["prefix_evicted"] >= 1
+    t2.release_pages()
+    pool.evict_prefixes()
+
+
+# ----------------------------------------------------------------------------
+# satellite 3: prefix-safety guarantees
+# ----------------------------------------------------------------------------
+def test_sealed_page_write_raises_access_violation():
+    pool = make_pool()
+    prefill = make_prefill_worker(toy_prefill, pool)
+    table, _, _ = prefill("prefill", [1, 2, 3])
+    sealed = table.pages[-1]
+    assert sealed.shared
+    sealed.arrays()                    # reading a sealed page is fine
+    with pytest.raises(AccessViolation):
+        sealed.writable_arrays()
+    with pytest.raises(AccessViolation):
+        sealed._replace([jnp.zeros((4, 1), jnp.float32)])
+    table.release_pages()
+    pool.evict_prefixes()
+
+
+def test_decode_worker_rejects_shared_tail():
+    # a decode worker handed a still-shared (read-restricted) tail page
+    # must fail loudly before any compute, not corrupt the prefix
+    pool = make_pool()
+    prefill = make_prefill_worker(toy_prefill, pool)
+    table, first, _ = prefill("prefill", [1, 2, 3])
+    decode = make_paged_decode_worker(toy_paged_step, pool)
+    with pytest.raises(AccessViolation):
+        decode("pstep", (first,), ((tuple(table.pages), table.length),))
+    table.release_pages()
+    pool.evict_prefixes()
+
+
+def test_cow_divergence_leaves_sibling_byte_identical():
+    base = ref_baseline()
+    pool = make_pool(page_tokens=4)
+    prefill = make_prefill_worker(toy_prefill, pool)
+    prompt = [1, 2, 3, 4, 5, 6]        # length 6: full page + partial tail
+    ta, first, _ = prefill("prefill", prompt)
+    tb, _, _ = prefill("prefill", prompt)
+    assert ta.pages[-1] is tb.pages[-1]
+    (before,) = tb.gather()
+    before = np.asarray(before).copy()
+    # request A diverges: prepare_append must COW the shared tail...
+    tail_before = ta.pages[-1]
+    tail, off = ta.prepare_append()
+    assert tail is not tail_before and not tail.shared
+    assert off == ta.tail_offset() == 2
+    assert pool.stats()["cow"] == 1
+    # ...and A's committed write lands only in its private clone
+    new = tail.writable_arrays()[0].at[off].set(999.0)
+    ta.commit_append([new])
+    (ga,) = ta.gather()
+    assert np.asarray(ga)[6, 0] == 999.0
+    (after,) = tb.gather()
+    np.testing.assert_array_equal(np.asarray(after), before)  # untouched
+    ta.release_pages()
+    tb.release_pages()
+    pool.evict_prefixes()
+    assert_refs_settle(base)
+
+
+# ----------------------------------------------------------------------------
+# paged ServeEngine end-to-end
+# ----------------------------------------------------------------------------
+def test_engine_paged_end_to_end(system):
+    base = ref_baseline()
+    pool = make_pool(page_tokens=4, max_pages=128)
+    engine = ServeEngine(system, step_fn=toy_paged_step, cache_pool=pool,
+                         prefill_fn=toy_prefill, prefill_workers=2,
+                         n_workers=2, max_batch=4, step_timeout=60.0)
+    t0 = transfer_count()
+    with engine:
+        futs = [engine.submit([i, i + 1, i + 2], max_new_tokens=6)
+                for i in range(8)]
+        results = [f.result(timeout=120) for f in futs]
+    for i, r in enumerate(results):
+        assert r.tokens == simulate([i, i + 1, i + 2], 6), f"request {i}"
+    # the prefill→decode handoff is pure in-process ref passing
+    assert transfer_count() - t0 == 0
+    st = engine.stats()
+    assert st["completed"] == 8
+    assert st["prefills"] == 8
+    assert 0.0 < st["occupancy"] <= 1.0
+    assert st["pool"]["pages_live"] >= 0
+    pool.evict_prefixes()
+    assert_refs_settle(base)
+
+
+def test_engine_paged_prefix_hits_across_requests(system):
+    pool = make_pool(page_tokens=4, max_pages=128)
+    engine = ServeEngine(system, step_fn=toy_paged_step, cache_pool=pool,
+                         prefill_fn=toy_prefill, prefill_workers=1,
+                         n_workers=2, max_batch=4, step_timeout=60.0)
+    prompt = [7, 7, 7, 7]
+    with engine:
+        futs = [engine.submit(prompt, max_new_tokens=3) for _ in range(4)]
+        results = [f.result(timeout=120) for f in futs]
+    expected = simulate(prompt, 3)
+    assert all(r.tokens == expected for r in results)
+    st = engine.stats()
+    assert st["prefix_hits"] == 3              # first miss, three hits
+    assert st["pool"]["allocated"] >= 1
+    # identical prompts never re-allocated their prefix pages (COW clones
+    # and fresh decode tails are the only other allocations)
+    assert sum(1 for r in results if r.prefix_hit) == 3
+    pool.evict_prefixes()
+
+
+def test_engine_paged_prefill_crash_replays_exactly_once(system):
+    crashes = [1]
+
+    def flaky_prefill(prompt):
+        if crashes and crashes.pop():
+            raise RuntimeError("injected prefill crash")
+        return toy_prefill(prompt)
+
+    base = ref_baseline()
+    pool = make_pool(page_tokens=4, max_pages=64)
+    engine = ServeEngine(system, step_fn=toy_paged_step, cache_pool=pool,
+                         prefill_fn=flaky_prefill, prefill_workers=2,
+                         n_workers=2, max_batch=4, step_timeout=60.0)
+    with engine:
+        fut = engine.submit([2, 3, 4], max_new_tokens=4)
+        res = fut.result(timeout=120)
+    assert res.tokens == simulate([2, 3, 4], 4)   # replay, exactly once
+    st = engine.stats()
+    assert st["prefill_dispatch"]["failed"] >= 1  # the crash was real
+    pool.evict_prefixes()
+    assert_refs_settle(base)
+
+
+def test_engine_paged_validation():
+    pool = make_pool()
+    with pytest.raises(ValueError):               # no prefill_fn
+        ServeEngine(object(), step_fn=toy_paged_step, cache_pool=pool)
+    with pytest.raises(ValueError):               # init_fn in paged mode
+        ServeEngine(object(), step_fn=toy_paged_step, cache_pool=pool,
+                    prefill_fn=toy_prefill, init_fn=lambda p: (None, 0))
+
+
+# ----------------------------------------------------------------------------
+# satellite 2: page pressure in DeviceManager.memory_stats()
+# ----------------------------------------------------------------------------
+def test_memory_stats_reports_page_pressure(system):
+    pool = make_pool(max_pages=32)
+    pages = [pool.alloc_page() for _ in range(2)]
+    stats = system.opencl_manager().memory_stats()
+    dev = next(iter(stats.values()))
+    for key in ("pages_total", "pages_free", "pages_shared",
+                "fragmentation"):
+        assert key in dev
+    total = sum(d["pages_total"] for d in stats.values())
+    free = sum(d["pages_free"] for d in stats.values())
+    assert total >= 32
+    assert total - free >= 2            # our two live pages are visible
+    pool.release_pages(pages)

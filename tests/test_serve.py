@@ -278,6 +278,30 @@ def test_engine_leak_free_and_deadline_shedding(system):
     assert eng.stats()["expired"] >= 1
 
 
+def test_failed_cache_init_releases_partial_tree(system):
+    # regression: init_fn returning a tree whose *second* leaf fails to
+    # wrap used to leak the DeviceRef already created for the first —
+    # every shed/failed admission exit must release what it built
+    class BadLeaf:
+        def __array__(self):
+            raise RuntimeError("unwrappable cache leaf")
+
+    def bad_init(prompt):
+        return (jnp.zeros(4, jnp.float32), BadLeaf()), 0
+
+    gc.collect()
+    base = live_ref_count()
+    eng = ServeEngine(system, counter_step, bad_init, n_workers=2,
+                      max_batch=4)
+    with eng:
+        fut = eng.submit(1, max_new_tokens=2)
+        with pytest.raises(RuntimeError, match="unwrappable"):
+            fut.result(60)
+    gc.collect()
+    assert live_ref_count() == base  # the good leaf was released
+    assert eng.stats()["failed"] == 1
+
+
 # ----------------------------------------------------------------------------
 # fault injection
 # ----------------------------------------------------------------------------
