@@ -1,23 +1,42 @@
-"""Dataflow-graph composition benchmark (ISSUE 4): the acceptance diamond
-(source → broadcast(2) → two kernel branches → zip_join → sink) run three
-ways —
+"""Dataflow-graph composition benchmark (ISSUE 4 diamond + ISSUE 7 fusion).
 
-* ``host_roundtrip`` — every node is a standalone value-semantics actor
-  and the fan-out/fan-in is orchestrated on the host: each edge pays a
-  device→host read-back and a host→device upload;
-* ``graph_staged``   — the same topology built with ``repro.core.Graph``:
-  interior edges are lowered to ref-emitting actors, so the only host
-  traffic is the final read-back;
-* ``graph_mapped``   — the staged diamond with the two branches fanned
-  out per-chunk through ``map_over`` (ChunkScheduler over a 2-replica
-  pool each).
+Two workloads, each measured against a hand-written ``jax.jit`` native
+baseline so the actor layer's overhead is a dimensionless ratio
+(``overhead_vs_native``, the headline number of ``BENCH_PR7.json``):
 
-Besides wall time, the RefRegistry host-transfer counters for one run of
-each variant are recorded — the headline number the PR-over-PR snapshot
-(``BENCH_PR4.json``) tracks.
+**diamond** — the acceptance diamond (source → broadcast(2) → matmul /
+elementwise branches → zip_join → sink), run as:
+
+* ``host_roundtrip`` — standalone value-semantics actors, host fan-in:
+  every edge pays a device→host read-back and a host→device upload;
+* ``graph_staged``   — ``repro.core.Graph``: interior edges are
+  ref-emitting, the only host traffic is the final read-back;
+* ``graph_fused``    — the same math with the elementwise branch split
+  into two kernels and ``build(fuse=True)``: the fusion pass collapses
+  the branch into one jitted actor (one region, one dispatch);
+* ``graph_mapped``   — the elementwise branch fanned out per-chunk via
+  ``map_over``. With the default ``min_chunk_bytes`` (1 MiB) the
+  512×512 f32 operand (exactly 1 MiB) stays whole — the PR 4 snapshot
+  showed chunking it 4-ways cost ~6.4 ms of pure per-chunk dispatch
+  constant (~300 µs × chunks × stages) for zero parallel win;
+* ``graph_mapped_forced`` — ``min_chunk_bytes=0`` re-enables the
+  4-way split so the regression stays measurable on purpose;
+* ``native_jit``     — ``jax.jit`` of the whole composite + device_get.
+
+**chain** — a 4-stage matmul chain (each stage ``x @ x * 0.5 + x``),
+run staged (one actor per stage, ref edges), fused (one region → one
+actor, inline-dispatched), and native. The fused chain is the ISSUE 7
+acceptance workload: ``overhead_vs_native`` must stay ≤ 1.10.
+
+``--smoke`` (or ``run(smoke=True)``) does a 1-warmup/3-rep pass and
+asserts the ratios are finite and fused ≤ staged — cheap enough for CI;
+the JSON snapshot is only written by full runs.
 """
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,7 +46,9 @@ from repro.core import (ActorSystem, Graph, In, NDRange, Out, dim_vec,
 from .common import emit, timeit
 
 _N = 512
+_CHAIN_STAGES = 4
 RESULTS: dict = {}
+RATIOS: dict = {}
 
 
 @kernel(In(jnp.float32), Out(jnp.float32),
@@ -42,6 +63,18 @@ def _right(x):
     return x * 2.0 + 1.0
 
 
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_mul2")
+def _mul2(x):
+    return x * 2.0
+
+
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_add1")
+def _add1(x):
+    return x + 1.0
+
+
 @kernel(In(jnp.float32), In(jnp.float32), Out(jnp.float32),
         nd_range=NDRange(dim_vec(_N, _N)), name="g_sink")
 def _sink(a, b):
@@ -54,6 +87,12 @@ def _row(x):
     return x * 2.0 + 1.0
 
 
+@kernel(In(jnp.float32), Out(jnp.float32),
+        nd_range=NDRange(dim_vec(_N, _N)), name="g_step")
+def _step(x):
+    return x @ x * 0.5 + x
+
+
 def _traffic(fn) -> dict:
     reset_transfer_stats()
     fn()
@@ -61,12 +100,58 @@ def _traffic(fn) -> dict:
     return {"transfers": stats["transfers"], "readbacks": stats["readbacks"]}
 
 
-def run() -> None:
+def _build_diamond(system, name, *, mapped=False, split_branch=False,
+                   min_chunk_bytes=None) -> "Graph":
+    g = Graph(system, name=name)
+    s = g.source("x", jnp.float32, shape=(_N, _N))
+    l, r = g.broadcast(s, 2)
+    bl = g.apply(_left, l)
+    if mapped:
+        # chunk the element-wise branch only: a matmul is not
+        # row-separable, mixing whole-node and chunked nodes is
+        # exactly what the DAG builder allows
+        kw = {} if min_chunk_bytes is None else {
+            "min_chunk_bytes": min_chunk_bytes}
+        br = g.map_over(_row, r, chunks=4, replicas=2, **kw)
+    elif split_branch:
+        # same math as _right, as two fusible kernels: the fusion pass
+        # collapses them into one region → one actor, one dispatch
+        br = g.apply(_add1, g.apply(_mul2, r))
+    else:
+        br = g.apply(_right, r)
+    j1, j2 = g.zip_join(bl, br)
+    g.output(g.apply(_sink, j1, j2))
+    return g
+
+
+def _build_chain(system, name) -> "Graph":
+    g = Graph(system, name=name)
+    cur = g.source("x", jnp.float32, shape=(_N, _N))
+    for _ in range(_CHAIN_STAGES):
+        cur = g.apply(_step, cur)
+    g.output(cur)
+    return g
+
+
+def _measure(name, fn, *, repeat, warmup, ref=None):
+    t = timeit(fn, repeat=repeat, warmup=warmup)
+    traffic = _traffic(fn)
+    emit(f"graph/{name}", t * 1e6,
+         f"transfers={traffic['transfers']} "
+         f"readbacks={traffic['readbacks']}")
+    RESULTS[name] = {"us_per_call": round(t * 1e6, 1), **traffic}
+    if ref is not None:
+        np.testing.assert_allclose(fn(), ref, rtol=1e-4, atol=1e-5)
+    return t
+
+
+def run(smoke: bool = False) -> None:
+    repeat, warmup = (3, 1) if smoke else (7, 2)
     rng = np.random.default_rng(0)
     x = (rng.random((_N, _N), np.float32) - 0.5) / _N
 
     with ActorSystem(max_workers=8) as system:
-        # host-roundtrip baseline: standalone value actors, host fan-in
+        # -- diamond -----------------------------------------------------
         left_w = system.spawn(_left)
         right_w = system.spawn(_right)
         sink_w = system.spawn(_sink)
@@ -76,42 +161,83 @@ def run() -> None:
             fr = right_w.request(x)
             return sink_w.ask(fl.result(60), fr.result(60))
 
-        def build_diamond(name, mapped: bool) -> "Graph":
-            g = Graph(system, name=name)
-            s = g.source("x", jnp.float32, shape=(_N, _N))
-            l, r = g.broadcast(s, 2)
-            if mapped:
-                # chunk the element-wise branch only: a matmul is not
-                # row-separable, mixing whole-node and chunked nodes is
-                # exactly what the DAG builder allows
-                bl = g.apply(_left, l)
-                br = g.map_over(_row, r, chunks=4, replicas=2)
-            else:
-                bl, br = g.apply(_left, l), g.apply(_right, r)
-            j1, j2 = g.zip_join(bl, br)
-            g.output(g.apply(_sink, j1, j2))
-            return g
+        staged = _build_diamond(system, "bench_diamond").build()
+        fused = _build_diamond(system, "bench_diamond_fuse",
+                               split_branch=True).build(fuse=True)
+        assert fused.plan.fused_regions == [
+            ["bench_diamond_fuse/g_mul2", "bench_diamond_fuse/g_add1"]]
+        mapped = _build_diamond(system, "bench_diamond_map",
+                                mapped=True).build()
+        forced = _build_diamond(system, "bench_diamond_map4", mapped=True,
+                                min_chunk_bytes=0).build()
 
-        staged = build_diamond("bench_diamond", mapped=False).build()
-        mapped = build_diamond("bench_diamond_map", mapped=True).build()
+        native_diamond = jax.jit(lambda v: v @ v + (v * 2.0 + 1.0))
+        native_diamond(x)  # compile outside the timed region
 
-        want = host_roundtrip()
-        np.testing.assert_allclose(staged.ask(x), want, rtol=1e-4, atol=1e-5)
-        np.testing.assert_allclose(mapped.ask(x), want, rtol=1e-4, atol=1e-5)
+        want = np.asarray(jax.device_get(native_diamond(x)))
+        t_native_d = _measure(
+            "diamond_native_jit",
+            lambda: jax.device_get(native_diamond(x)),
+            repeat=repeat, warmup=warmup)
+        _measure("diamond_host_roundtrip", host_roundtrip,
+                 repeat=repeat, warmup=warmup, ref=want)
+        t_staged_d = _measure("diamond_graph_staged", lambda: staged.ask(x),
+                              repeat=repeat, warmup=warmup, ref=want)
+        t_fused_d = _measure("diamond_graph_fused", lambda: fused.ask(x),
+                             repeat=repeat, warmup=warmup, ref=want)
+        _measure("diamond_graph_mapped", lambda: mapped.ask(x),
+                 repeat=repeat, warmup=warmup, ref=want)
+        _measure("diamond_graph_mapped_forced", lambda: forced.ask(x),
+                 repeat=repeat, warmup=warmup, ref=want)
 
-        variants = {
-            "diamond_host_roundtrip": host_roundtrip,
-            "diamond_graph_staged": lambda: staged.ask(x),
-            "diamond_graph_mapped": lambda: mapped.ask(x),
-        }
-        for name, fn in variants.items():
-            t = timeit(fn, repeat=7, warmup=2)
-            traffic = _traffic(fn)
-            emit(f"graph/{name}", t * 1e6,
-                 f"transfers={traffic['transfers']} "
-                 f"readbacks={traffic['readbacks']}")
-            RESULTS[name] = {"us_per_call": round(t * 1e6, 1), **traffic}
-    _write_snapshot()
+        RATIOS["diamond_staged"] = round(t_staged_d / t_native_d, 3)
+        RATIOS["diamond_fused"] = round(t_fused_d / t_native_d, 3)
+
+        # -- chain -------------------------------------------------------
+        chain_staged = _build_chain(system, "bench_chain").build()
+        chain_fused = _build_chain(system, "bench_chain_fuse").build(
+            fuse=True)
+        assert len(chain_fused.plan.fused_regions) == 1
+        assert len(chain_fused.plan.fused_regions[0]) == _CHAIN_STAGES
+
+        def _chain_math(v):
+            for _ in range(_CHAIN_STAGES):
+                v = v @ v * 0.5 + v
+            return v
+        native_chain = jax.jit(_chain_math)
+        native_chain(x)
+        want_c = np.asarray(jax.device_get(native_chain(x)))
+
+        t_native_c = _measure(
+            "chain_native_jit",
+            lambda: jax.device_get(native_chain(x)),
+            repeat=repeat, warmup=warmup)
+        t_staged_c = _measure("chain_graph_staged",
+                              lambda: chain_staged.ask(x),
+                              repeat=repeat, warmup=warmup, ref=want_c)
+        t_fused_c = _measure("chain_graph_fused",
+                             lambda: chain_fused.ask(x),
+                             repeat=repeat, warmup=warmup, ref=want_c)
+
+        RATIOS["chain_staged"] = round(t_staged_c / t_native_c, 3)
+        RATIOS["chain_fused"] = round(t_fused_c / t_native_c, 3)
+
+        ds = chain_fused.dispatch_stats
+        assert ds["inline"] > 0 and ds["mailbox"] == 0, \
+            f"fused chain did not dispatch inline: {ds}"
+
+    for k, v in RATIOS.items():
+        emit(f"graph/overhead_vs_native[{k}]", 0.0, f"ratio={v}")
+
+    if smoke:
+        for k, v in RATIOS.items():
+            assert math.isfinite(v) and v > 0, f"bad ratio {k}={v}"
+        assert t_fused_c <= t_staged_c, (
+            f"fused chain slower than staged: {t_fused_c*1e6:.0f}us > "
+            f"{t_staged_c*1e6:.0f}us")
+        print("smoke ok:", RATIOS)
+    else:
+        _write_snapshot()
 
 
 def _write_snapshot() -> None:
@@ -120,22 +246,26 @@ def _write_snapshot() -> None:
     import platform
     import time
 
-    import jax
-
     snap = {
-        "pr": 4,
+        "pr": 7,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "jax": jax.__version__,
-        "workload": {"n": _N, "shape": "diamond(source, broadcast, "
-                     "2 branches, zip_join, sink)"},
+        "workload": {
+            "n": _N,
+            "diamond": "source, broadcast, matmul/elementwise branches, "
+                       "zip_join, sink",
+            "chain": f"{_CHAIN_STAGES} stages of x @ x * 0.5 + x",
+        },
+        "overhead_vs_native": RATIOS,
         "variants": RESULTS,
     }
-    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR7.json"
     out.write_text(json.dumps(snap, indent=2) + "\n")
     print(f"wrote {out}")
 
 
 if __name__ == "__main__":  # pragma: no cover - manual invocation
-    run()
+    import sys
+    run(smoke="--smoke" in sys.argv)

@@ -34,7 +34,7 @@ from .errors import (AccessViolation, ActorError, ActorFailed,
                      DownMessage, ExitMessage, GraphCycleError, GraphError,
                      MailboxClosed, PortTypeMismatchError, SignatureMismatch)
 from .facade import KernelActor
-from .graph import Graph, GraphNode, GraphRef, Port, PortType
+from .graph import Graph, GraphNode, GraphPlan, GraphRef, Port, PortType
 from .manager import Device, DeviceManager, Platform, Program
 from .memref import (DeviceRef, RefRegistry, as_device_array, live_ref_count,
                      memory_stats, reset_transfer_stats, transfer_count,
@@ -51,7 +51,7 @@ __all__ = [
     "GraphCycleError", "GraphError", "MailboxClosed",
     "PortTypeMismatchError", "SignatureMismatch",
     "KernelActor",
-    "Graph", "GraphNode", "GraphRef", "Port", "PortType",
+    "Graph", "GraphNode", "GraphPlan", "GraphRef", "Port", "PortType",
     "Device", "DeviceManager", "Platform", "Program",
     "DeviceRef", "RefRegistry", "as_device_array", "live_ref_count",
     "memory_stats", "reset_transfer_stats", "transfer_count",

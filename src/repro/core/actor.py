@@ -178,7 +178,7 @@ class _FunctionActor(Actor):
 
 class _ActorState:
     __slots__ = ("actor", "mailbox", "lock", "scheduled", "alive", "reason",
-                 "monitors", "links", "started")
+                 "monitors", "links", "started", "inline")
 
     def __init__(self, actor: Actor):
         self.actor = actor
@@ -190,6 +190,11 @@ class _ActorState:
         self.monitors: list = []   # ActorRefs to notify with DownMessage
         self.links: list = []      # ActorRefs to notify with ExitMessage
         self.started = False
+        #: True while a synchronous inline call (``try_call_inline``) is
+        #: executing the behavior on a caller thread; excludes the drain
+        #: loop the same way ``scheduled`` does, so the single-threaded
+        #: actor contract holds across both dispatch paths
+        self.inline = False
 
 
 class ActorSystem:
@@ -213,7 +218,7 @@ class ActorSystem:
         self._registry_lock = threading.Lock()
         self._shutdown = False
         self._manager = None
-        self.stats = {"spawned": 0, "messages": 0}
+        self.stats = {"spawned": 0, "messages": 0, "inline_calls": 0}
 
     # -- spawning ------------------------------------------------------
     def spawn(self, behavior, *args, lazy_init: bool = True, **kwargs) -> ActorRef:
@@ -307,6 +312,67 @@ class ActorSystem:
                     return
         listener.send(ExitMessage(target.actor_id, st.reason if st else None))
 
+    # -- inline fast path --------------------------------------------------
+    def try_call_inline(self, actor_id: int, payload: tuple
+                        ) -> Tuple[bool, Any]:
+        """Attempt to run ``actor_id``'s behavior synchronously on the
+        calling thread, bypassing the mailbox/scheduler hop (the graph
+        orchestrator's dispatch fast path).
+
+        Returns ``(True, result)`` on success, ``(False, None)`` on a
+        *miss* — the caller must then fall back to the ordinary mailbox
+        path. A miss means the fast path cannot preserve actor semantics
+        right now: the actor is dead, has queued messages (mailbox ordering
+        must hold), is already executing (``scheduled``/``inline`` — the
+        single-threaded contract), or has monitors/links attached (a
+        supervised actor keeps the fully-ordered mailbox path so PR 5
+        supervision semantics are untouched).
+
+        The reentrancy guard (``_ActorState.inline``) excludes the drain
+        loop exactly like ``scheduled`` does: while it is held, newly
+        enqueued messages park in the mailbox and are rescheduled when the
+        inline call finishes. A behavior that raises terminates the actor
+        with the exception as the reason — identical to the mailbox path —
+        and the exception propagates to the caller.
+        """
+        st = self._actors.get(actor_id)
+        if st is None:
+            return False, None
+        with st.lock:
+            if (not st.alive or st.mailbox or st.scheduled or st.inline
+                    or st.monitors or st.links):
+                return False, None
+            st.inline = True
+        try:
+            actor = st.actor
+            if not st.started:
+                actor.on_start()
+                st.started = True
+            result = actor.receive(*payload)
+        except Exception as exc:
+            # terminate *before* releasing the guard: messages that arrived
+            # mid-call are failed by the termination sweep rather than
+            # handed to a drain racing the death
+            self._terminate(actor_id, exc)
+            self._release_inline(st, actor_id)
+            raise
+        self.stats["inline_calls"] += 1
+        self._release_inline(st, actor_id)
+        return True, result
+
+    def _release_inline(self, st: "_ActorState", actor_id: int) -> None:
+        resubmit = False
+        with st.lock:
+            st.inline = False
+            if st.mailbox and st.alive and not st.scheduled:
+                st.scheduled = True
+                resubmit = True
+        if resubmit:
+            try:
+                self._executor.submit(self._drain, actor_id)
+            except RuntimeError:        # executor shut down: drain inline
+                self._drain(actor_id)
+
     # -- scheduling internals ----------------------------------------------
     def _enqueue(self, actor_id: int, msg: Message) -> None:
         st = self._actors.get(actor_id)
@@ -321,7 +387,10 @@ class ActorSystem:
                     st.mailbox.append(msg)
                     delivered = True
                     self.stats["messages"] += 1
-                    if st.scheduled:
+                    if st.scheduled or st.inline:
+                        # already claimed: a running drain will see the new
+                        # message, and an inline call reschedules the drain
+                        # in its release path
                         return
                     st.scheduled = True
         if not delivered:

@@ -278,12 +278,19 @@ class Pipeline:
         return g.build()
 
     def _build_fused(self) -> ActorRef:
-        from .facade import KernelActor
+        """Fused (single-actor) composition, §3.6 style — re-routed through
+        the Graph **fusion pass**: stages become a linear chain graph and
+        ``Graph.build(fuse=True)`` collapses the contiguous kernel runs
+        into single jitted actors. Staged and fused composition therefore
+        converge on one lowering path, and fused pipelines inherit the
+        graph's build-time validation, ref accounting, and the
+        :meth:`~repro.core.graph.GraphRef.ask` inline-dispatch fast path.
+        """
+        from .graph import Graph
 
-        fns: List[Callable] = []
-        first_sig = last_sig = None
-        first_nd = None
+        entries: List[Any] = []
         device = self.device
+        has_kernel = False
         for s in self._stages:
             target = s.target
             if isinstance(target, ActorRef):
@@ -291,40 +298,40 @@ class Pipeline:
                 if ka is None:
                     raise TypeError(f"{target} is not a kernel actor; "
                                     "cannot fuse")
-                fns.append(_bound_fn(ka.fn, ka.nd_range,
-                                     ka.signature.local_specs,
-                                     known_kwargs=ka._fn_kwargs))
-                sig, nd, dev = ka.signature, ka.nd_range, ka.device
+                # re-declare the actor's kernel so the graph pass can trace
+                # it; the running actor itself is never touched
+                entries.append(KernelDecl(
+                    ka.fn, ka.signature.specs, nd_range=ka.nd_range,
+                    name=ka.kernel_name, preprocess=ka.preprocess,
+                    postprocess=ka.postprocess, donate=ka.donate))
+                has_kernel = True
+                device = device or s.device or ka.device
             elif isinstance(target, KernelDecl):
-                fns.append(_bound_fn(target.fn, target.nd_range,
-                                     target.signature.local_specs))
-                sig, nd, dev = target.signature, target.nd_range, None
+                entries.append(target)
+                has_kernel = True
+                device = device or s.device
             elif callable(target):
-                fns.append(target)
-                continue
+                entries.append(target)
             else:  # pragma: no cover - guarded in stage()
                 raise TypeError(f"cannot fuse {target!r}")
-            if first_sig is None:
-                first_sig, first_nd = sig, nd
-            last_sig = sig
-            device = device or s.device or dev
-        if first_sig is None:
+        if not has_kernel:
             raise ValueError("fuse needs at least one kernel stage")
+        if self.nd_range is not None:
+            # the pipeline-level override resizes the first kernel's index
+            # space (the old builder carried it on the fused actor, where
+            # it was inert for dispatch)
+            for i, e in enumerate(entries):
+                if isinstance(e, KernelDecl):
+                    entries[i] = e.with_options(nd_range=self.nd_range)
+                    break
 
-        def fused_fn(*inputs):
-            vals = inputs
-            for f in fns:
-                out = f(*vals)
-                vals = out if isinstance(out, tuple) else (out,)
-            return vals
-
-        specs = tuple(first_sig.input_specs) + tuple(last_sig.output_specs)
-        mngr = self.system.opencl_manager()
-        actor = KernelActor(
-            fn=fused_fn, name=self.name,
-            nd_range=self.nd_range or first_nd, specs=specs,
-            device=device or mngr.find_device(), program=None)
-        return self.system.spawn(actor)
+        g = Graph(self.system, name=self.name)
+        cur = g.chain_source()
+        for e in entries:
+            cur = g.chain(e, cur, device=device,
+                          traceable=not isinstance(e, KernelDecl))
+        g.output(cur)
+        return g.build(fuse=True)
 
 
 def _bound_fn(fn: Callable, nd_range, local_specs,

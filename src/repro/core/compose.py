@@ -95,8 +95,10 @@ def compose(system: ActorSystem, *stages: ActorRef) -> ActorRef:
     ``fuse = move_elems * count_elems * prepare`` (Listing 5).
     """
     from .api import Pipeline  # local import: avoid cycle
-    warnings.warn("compose() is deprecated; use repro.core.Pipeline",
-                  DeprecationWarning, stacklevel=2)
+    warnings.warn(
+        "compose() is deprecated; use repro.core.Pipeline(mode=\"staged\") "
+        "— or build a dataflow Graph directly for non-linear topologies",
+        DeprecationWarning, stacklevel=2)
     return Pipeline(system, mode="staged").stages(stages).build()
 
 
@@ -112,7 +114,9 @@ def fuse(system: ActorSystem, *stages: Union[ActorRef, Callable],
     output signature; intermediates never materialize as messages.
     """
     from .api import Pipeline  # local import: avoid cycle
-    warnings.warn("fuse() is deprecated; use repro.core.Pipeline",
-                  DeprecationWarning, stacklevel=2)
+    warnings.warn(
+        "fuse() is deprecated; use repro.core.Pipeline(mode=\"fused\") or "
+        "repro.core.Graph.build(fuse=True), which run the trace-time "
+        "fusion pass", DeprecationWarning, stacklevel=2)
     return Pipeline(system, mode="fused", name=name, device=device,
                     nd_range=nd_range).stages(stages).build()

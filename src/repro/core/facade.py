@@ -97,11 +97,16 @@ class KernelActor(Actor):
                  program: Optional[Program] = None,
                  preprocess: Optional[Callable] = None,
                  postprocess: Optional[Callable] = None,
-                 donate: bool = True, emit: str = "declared"):
+                 donate: bool = True, emit: str = "declared",
+                 fused_from: Sequence[str] = ()):
         super().__init__()
         if emit not in ("declared", "ref"):
             raise ValueError(f"emit must be 'declared' or 'ref', got {emit!r}")
         self.fn = fn
+        #: node paths of the graph region this actor was fused from
+        #: (empty for ordinary single-kernel actors) — introspection for
+        #: the Graph fusion pass
+        self.fused_from = tuple(fused_from)
         self.kernel_name = name
         self.nd_range = nd_range
         self.signature = KernelSignature(*specs)
@@ -242,7 +247,8 @@ class KernelActor(Actor):
                            specs=self.signature.specs, device=self.device,
                            program=self.program, preprocess=self.preprocess,
                            postprocess=self.postprocess, donate=self.donate,
-                           emit=emit or self.emit)
+                           emit=emit or self.emit,
+                           fused_from=self.fused_from)
 
     def on_exit(self, reason):
         self._jitted = None

@@ -42,19 +42,20 @@ from __future__ import annotations
 import dataclasses
 import threading
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .actor import Actor, ActorRef, ActorSystem
-from .api import KernelDecl
+from .actor import _UNSET, Actor, ActorRef, ActorSystem
+from .api import KernelDecl, _bound_fn
 from .errors import (ArityMismatchError, DanglingPortError, GraphCycleError,
                      GraphError, PortTypeMismatchError)
 from .memref import DeviceRef, as_device_array, registry
 
-__all__ = ["Graph", "GraphNode", "GraphRef", "Port", "PortType"]
+__all__ = ["Graph", "GraphNode", "GraphPlan", "GraphRef", "Port", "PortType"]
 
 
 # ----------------------------------------------------------------------------
@@ -258,12 +259,20 @@ class Graph:
         return node.out(0) if node.n_out == 1 else node.outs()
 
     def chain(self, target, port: Port, *, name: Optional[str] = None,
-              device=None) -> Port:
+              device=None, traceable: bool = False) -> Port:
         """Append a splat-edged stage: the upstream value (a whole payload
-        tuple) is splatted into ``target`` — ``Pipeline``'s linear hop."""
+        tuple) is splatted into ``target`` — ``Pipeline``'s linear hop.
+
+        ``traceable=True`` marks a bare-callable stage as jax-traceable
+        (a pure array adapter), which lets :meth:`build` with ``fuse=True``
+        pull it *inside* a fused region instead of treating it as a
+        Python-stage boundary. Kernel declarations are traceable by
+        definition and ignore the flag.
+        """
         kind, _sig = self._classify(target)
         node = self._add(kind, target, name or _target_name(target),
-                         1, 1, device=device, splat=True)
+                         1, 1, device=device, splat=True,
+                         options={"traceable": True} if traceable else None)
         self.bind(node, 0, port)
         return node.out(0)
 
@@ -329,12 +338,23 @@ class Graph:
                  devices: Optional[Sequence] = None,
                  timeout: Optional[float] = 300.0,
                  name: Optional[str] = None,
+                 min_chunk_bytes: int = 1 << 20,
                  **scheduler_kwargs) -> Port:
         """Per-chunk fan-out: split the value along axis 0 into ``chunks``
         device-resident slices, dispatch them through a
         :class:`~repro.core.scheduler.ChunkScheduler` over a pool of
         ``replicas`` kernel actors (placement-aware, straggler re-issuing),
-        and concatenate the results on device."""
+        and concatenate the results on device.
+
+        Each chunk pays a fixed dispatch constant (a mailbox hop, a
+        device-side slice, a scheduler round-trip — BENCH_PR5 puts the hop
+        alone near 300 µs), so chunking only wins once per-chunk compute
+        dwarfs it. ``min_chunk_bytes`` (default 1 MiB) caps the effective
+        chunk count so no slice drops below that size: small inputs
+        degrade gracefully to a single whole-array dispatch instead of
+        paying ``chunks`` dispatch constants for sub-millisecond kernels
+        (the BENCH_PR4 ``diamond_graph_mapped`` regression). Pass
+        ``min_chunk_bytes=0`` to force the requested chunk count."""
         if not isinstance(target, KernelDecl):
             raise GraphError(
                 f"{self.name}/{name or _target_name(target)}: map_over "
@@ -354,6 +374,7 @@ class Graph:
             "map_over", target, name or f"map_{_target_name(target)}", 1, 1,
             options={"chunks": int(chunks), "replicas": int(replicas),
                      "policy": policy, "devices": devices, "timeout": timeout,
+                     "min_chunk_bytes": int(min_chunk_bytes),
                      "scheduler": dict(scheduler_kwargs)})
         self.bind(node, 0, port)
         return node.out(0)
@@ -548,13 +569,25 @@ class Graph:
         return self._kernel_actor_of(node.target).out_structs(structs)
 
     # -- lowering ----------------------------------------------------------
-    def build(self) -> "GraphRef":
+    def build(self, fuse: bool = False) -> "GraphRef":
         """Validate, place, lower, and spawn; returns a :class:`GraphRef`.
 
         Interior kernel edges are lowered to ``emit="ref"`` actors (zero
         host transfers between nodes); terminal kernels — those feeding a
         graph output or a non-ref-capable consumer — keep their declared
         value/reference semantics.
+
+        With ``fuse=True`` the placed DAG first runs through a
+        **trace-time fusion pass**: maximal linear regions of kernel nodes
+        (plus ``traceable`` adapter callables) on one device — containing
+        no fan-out/fan-in/``select``/``merge`` boundary, no opaque actor
+        node, and no port escaping as a graph output — collapse into a
+        *single* jitted callable behind one
+        :class:`~repro.core.facade.KernelActor` (the paper's §3.6 kernel
+        composition done once at build time instead of per-message at
+        actor-hop time). Region boundaries keep exactly the emission
+        semantics the unfused graph would have had, and the grouping is
+        reported via ``GraphRef.plan.fused_regions``.
         """
         topo = self.validate()
         consumers = self._consumers()
@@ -562,19 +595,57 @@ class Graph:
         mngr = self.system.opencl_manager()
 
         refcap = {n.idx: self._ref_capable(n) for n in self.nodes}
+        # placement runs over the whole DAG before anything is spawned:
+        # the fusion pass and the inline-dispatch table both need every
+        # node's device up front
         placements: Dict[int, Any] = {}
+        for node in topo:
+            if node.kind in _ACTOR_KINDS:
+                device = self._place(node, placements, mngr)
+                if device is not None:
+                    placements[node.idx] = device
+
+        regions = (self._fuse_regions(topo, consumers, outset, placements)
+                   if fuse else [])
+        member_of: Dict[int, int] = {}
+        tail_of: Dict[int, int] = {}
+        by_head: Dict[int, List[GraphNode]] = {}
+        for region in regions:
+            head = region[0].idx
+            by_head[head] = region
+            tail_of[head] = region[-1].idx
+            for n in region:
+                member_of[n.idx] = head
+
         refs: Dict[int, Optional[ActorRef]] = {}
+        private: set = set()        # node idxs whose ref this build spawned
         for node in topo:
             if node.kind not in _ACTOR_KINDS:
                 refs[node.idx] = None
                 continue
-            device = self._place(node, placements, mngr)
-            if device is not None:
-                placements[node.idx] = device
-            want = self._wants_ref(node, consumers, outset, refcap)
-            refs[node.idx] = self._spawn_node(node, device, want, mngr)
+            head = member_of.get(node.idx)
+            if head is not None and head != node.idx:
+                refs[node.idx] = None   # interior member of a fused region
+                continue
+            device = placements.get(node.idx)
+            if head is not None:
+                region = by_head[head]
+                want = self._wants_ref(region[-1], consumers, outset, refcap)
+                refs[node.idx] = self._spawn_fused(region, device, want)
+                private.add(node.idx)
+            else:
+                want = self._wants_ref(node, consumers, outset, refcap)
+                refs[node.idx] = self._spawn_node(node, device, want, mngr)
+                if node.kind != "actor" or refs[node.idx] is not node.target:
+                    private.add(node.idx)
 
-        plan = _Plan(self, topo, consumers, refs, placements)
+        inline_ok = {
+            n.idx: self._inline_eligible(n, refs[n.idx], consumers, outset,
+                                         placements, private)
+            for n in self.nodes if refs.get(n.idx) is not None}
+        plan = GraphPlan(self, topo, consumers, refs, placements,
+                         regions=regions, member_of=member_of,
+                         tail_of=tail_of, inline_ok=inline_ok)
         ref = self.system.spawn(_GraphActor(plan))
         gref = GraphRef(ref.actor_id, self.system)
         gref.plan = plan
@@ -583,6 +654,180 @@ class Graph:
         gref.node_refs = {self.nodes[i].path: r
                           for i, r in refs.items() if r is not None}
         return gref
+
+    # -- fusion pass -------------------------------------------------------
+    def _fusible_node(self, node: GraphNode) -> bool:
+        """May this node live *inside* a fused region? Kernel declarations
+        always; bare callables only when marked ``traceable`` (an opaque
+        Python stage may block, perform I/O, or inspect concrete values —
+        none of which survives a jit trace). Existing actor refs never
+        fuse: their behavior is not a traceable function."""
+        if node.kind == "kernel":
+            return True
+        return node.kind == "func" and bool(node.options.get("traceable"))
+
+    def _fuse_successor(self, u: GraphNode, consumers, outset, placements
+                        ) -> Optional[GraphNode]:
+        """The unique node a region ending in ``u`` may extend into, or
+        ``None`` at a fusion boundary: fan-out (several consumers), an
+        escaping output port, external fan-in into the successor, a
+        postprocess on ``u`` (must stay a region tail — it runs on the
+        emitted representation), a preprocess on the successor (must stay
+        a region head — it runs on the raw payload), or a device change."""
+        if u.kind == "kernel" and u.target.postprocess is not None:
+            return None
+        v: Optional[GraphNode] = None
+        for oi in range(u.n_out):
+            key = (u.idx, oi)
+            if key in outset:
+                return None
+            for dst, _slot in consumers.get(key, ()):
+                cand = self.nodes[dst]
+                if v is None:
+                    v = cand
+                elif cand is not v:
+                    return None
+        if v is None:
+            return None
+        if any(p.node is not u for p in v.inputs):
+            return None
+        if v.kind == "kernel" and v.target.preprocess is not None:
+            return None
+        du, dv = placements.get(u.idx), placements.get(v.idx)
+        if du is None and dv is None:
+            return v
+        if du is None or dv is None:
+            return None
+        if du is not dv and getattr(du, "jax_device", du) != \
+                getattr(dv, "jax_device", dv):
+            return None
+        return v
+
+    def _fuse_regions(self, topo, consumers, outset, placements
+                      ) -> List[List[GraphNode]]:
+        """Greedy maximal linear regions over the placed DAG (topo order
+        guarantees a chain's earliest node is visited first, so every
+        region starts at its true head). Single-node regions are dropped —
+        nothing to fuse — as are all-adapter regions (no kernel signature
+        to anchor the fused actor's specs on)."""
+        regions: List[List[GraphNode]] = []
+        assigned: set = set()
+        for node in topo:
+            if node.idx in assigned or not self._fusible_node(node):
+                continue
+            region = [node]
+            while True:
+                nxt = self._fuse_successor(region[-1], consumers, outset,
+                                           placements)
+                if nxt is None or nxt.idx in assigned or \
+                        not self._fusible_node(nxt):
+                    break
+                region.append(nxt)
+            if len(region) >= 2 and any(n.kind == "kernel" for n in region):
+                regions.append(region)
+                assigned.update(n.idx for n in region)
+        return regions
+
+    def _spawn_fused(self, region: List[GraphNode], device, want_ref: bool
+                     ) -> ActorRef:
+        """One :class:`~repro.core.facade.KernelActor` for a fused region:
+        the members' traceables are chained inside a single jit, so the
+        whole region costs one actor hop and one XLA dispatch. Specs are
+        the first kernel member's inputs plus the last kernel member's
+        outputs (the fused-``Pipeline`` contract); the head's preprocess
+        and the tail's postprocess — the only ones a region may contain —
+        carry over to the fused actor."""
+        from .facade import KernelActor
+        steps: List[Tuple[GraphNode, Callable]] = []
+        first_sig = last_sig = None
+        first_nd = None
+        donate = True
+        for node in region:
+            if node.kind == "kernel":
+                decl: KernelDecl = node.target
+                steps.append((node, _bound_fn(decl.fn, decl.nd_range,
+                                              decl.signature.local_specs)))
+                if first_sig is None:
+                    first_sig, first_nd = decl.signature, decl.nd_range
+                    donate = decl.donate
+                last_sig = decl.signature
+            else:               # traceable adapter callable
+                steps.append((node, node.target))
+
+        def fused_fn(*inputs):
+            outs: Any = ()
+            for pos, (node, f) in enumerate(steps):
+                if pos == 0:
+                    args = inputs
+                elif node.splat:
+                    args = outs if isinstance(outs, tuple) else (outs,)
+                else:
+                    norm = outs if isinstance(outs, tuple) else (outs,)
+                    args = tuple(norm[p.index] for p in node.inputs)
+                outs = f(*args)
+            return outs
+
+        head, tail = region[0], region[-1]
+        specs = tuple(first_sig.input_specs) + tuple(last_sig.output_specs)
+        mngr = self.system.opencl_manager()
+        actor = KernelActor(
+            fn=fused_fn,
+            name="fused[" + "+".join(n.name for n in region) + "]",
+            nd_range=first_nd, specs=specs,
+            device=device if device is not None else mngr.find_device(),
+            program=None,
+            preprocess=(head.target.preprocess if head.kind == "kernel"
+                        else None),
+            postprocess=(tail.target.postprocess if tail.kind == "kernel"
+                         else None),
+            donate=donate,
+            emit="ref" if want_ref else "declared",
+            fused_from=tuple(n.path for n in region))
+        return self.system.spawn(actor)
+
+    # -- inline-dispatch eligibility ---------------------------------------
+    def _effective_producer(self, port: Port) -> Optional[GraphNode]:
+        """The actor/source node whose value actually flows through
+        ``port``, walking back through structural nodes; ``None`` when the
+        path crosses a value-sharing node (``broadcast`` — inlining one
+        arm would serialize its siblings on the producer's thread) or a
+        racy fan-in (``merge`` — the loser's speculative work must keep
+        its own mailbox)."""
+        node = port.node
+        while node.kind in _STRUCTURAL:
+            if node.kind in ("broadcast", "merge"):
+                return None
+            port = (node.inputs[0] if node.kind == "select"
+                    else node.inputs[port.index])
+            node = port.node
+        return node
+
+    def _inline_eligible(self, node: GraphNode, ref, consumers, outset,
+                         placements, private) -> bool:
+        """May the orchestrator dispatch this node by calling its behavior
+        directly instead of enqueueing (the hot-path bypass)? Only when
+        the ref is private to this build (nobody else can observe its
+        mailbox ordering) and local, and every in-edge is single-consumer
+        from a same-device unshared producer. Monitors/links are a runtime
+        condition and are re-checked per call in
+        :meth:`~repro.core.actor.ActorSystem.try_call_inline`."""
+        if node.idx not in private or getattr(ref, "is_remote", False):
+            return False
+        vd = placements.get(node.idx)
+        for p in node.inputs:
+            if p.key in outset or len(consumers.get(p.key, ())) != 1:
+                return False
+            prod = self._effective_producer(p)
+            if prod is None:
+                return False
+            if prod.kind == "source":
+                continue        # payload arrives host-side anyway
+            pd = placements.get(prod.idx)
+            if pd is not None and vd is not None and pd is not vd and \
+                    getattr(pd, "jax_device", pd) != \
+                    getattr(vd, "jax_device", vd):
+                return False
+        return True
 
     def _ref_capable(self, node: GraphNode) -> bool:
         """Can this node consume DeviceRef payloads? Kernel-backed nodes
@@ -682,12 +927,18 @@ class Graph:
             decl, opts["replicas"], policy=opts["policy"], devices=devices,
             emit="ref" if decl.postprocess is None else "declared")
         chunks, timeout = opts["chunks"], opts["timeout"]
+        min_bytes = opts.get("min_chunk_bytes", 0)
         sched_kwargs = opts["scheduler"]
 
         def run_map(x):
             arr = x.array if isinstance(x, DeviceRef) else as_device_array(x)
             n = int(arr.shape[0])
             k = max(1, min(chunks, n))
+            if min_bytes and arr.nbytes and arr.nbytes // k < min_bytes:
+                # sub-threshold slices can't amortize the per-chunk
+                # dispatch constant; shrink the chunk count (down to a
+                # single whole-array dispatch) instead of paying it k times
+                k = max(1, min(k, int(arr.nbytes) // min_bytes))
             bounds = np.linspace(0, n, k + 1).astype(int)
             owned, payloads = [], []
             for a, b in zip(bounds[:-1], bounds[1:]):
@@ -734,13 +985,25 @@ def _target_name(target) -> str:
 # ----------------------------------------------------------------------------
 # runtime plan + orchestrator
 # ----------------------------------------------------------------------------
-class _Plan:
-    """Everything the orchestrator needs at runtime, frozen at build."""
+class GraphPlan:
+    """Everything the orchestrator needs at runtime, frozen at build.
+
+    The fusion pass and the dispatch fast path surface here:
+    ``fused_regions`` (node-path groups, one list per fused
+    :class:`~repro.core.facade.KernelActor`), ``member_of``/``produce_as``
+    (member idx → region head / head idx → region tail — how a fused
+    actor's single reply is attributed to the tail's output ports),
+    ``inline_ok`` (per-node verdict of the build-time inline-dispatch
+    analysis), and ``counters`` (``inline`` vs ``mailbox`` dispatch
+    counts, served by :attr:`GraphRef.dispatch_stats`)."""
 
     __slots__ = ("name", "nodes", "order", "sources", "outputs", "outset",
-                 "consumers", "refs", "placements", "chain_refs")
+                 "consumers", "refs", "placements", "chain_refs",
+                 "fused_regions", "member_of", "produce_as", "inline_ok",
+                 "counters", "_counters_lock")
 
-    def __init__(self, graph: Graph, topo, consumers, refs, placements):
+    def __init__(self, graph: Graph, topo, consumers, refs, placements, *,
+                 regions=(), member_of=None, tail_of=None, inline_ok=None):
         self.name = graph.name
         self.nodes = list(graph.nodes)
         self.order = [n.idx for n in topo]
@@ -750,13 +1013,25 @@ class _Plan:
         self.consumers = consumers
         self.refs = refs
         self.placements = placements
+        self.fused_regions = [[n.path for n in r] for r in regions]
+        self.member_of = dict(member_of or {})
+        self.produce_as = dict(tail_of or {})
+        self.inline_ok = dict(inline_ok or {})
+        self.counters = {"inline": 0, "mailbox": 0}
+        self._counters_lock = threading.Lock()
         self.chain_refs = self._linear_chain()
+
+    def count_dispatch(self, kind: str) -> None:
+        with self._counters_lock:
+            self.counters[kind] += 1
 
     def _linear_chain(self) -> Optional[List[ActorRef]]:
         """The underlying stage refs when this graph is a pure linear
         chain — lets an outer ``Pipeline`` inline a built pipe's stages
         (the pre-composed-chain flattening the v1 builder did for
-        :class:`~repro.core.compose.ComposedActor`)."""
+        :class:`~repro.core.compose.ComposedActor`). Fused interiors carry
+        no ref of their own; the region's single fused actor stands in as
+        one chain stage."""
         if len(self.sources) != 1 or len(self.outputs) != 1:
             return None
         if any(n.kind not in ("source",) + _ACTOR_KINDS or n.n_out != 1
@@ -770,18 +1045,30 @@ class _Plan:
             p = node.inputs[0]
             if p.node.idx != prev or p.index != 0:
                 return None
-            chain.append(self.refs[idx])
+            r = self.refs[idx]
+            if r is not None:
+                chain.append(r)
             prev = idx
         if self.outputs[0] != (prev, 0) or not chain:
             return None
         return chain
 
 
+#: backward-compat alias (pre-PR7 internal name)
+_Plan = GraphPlan
+
+
 class _GraphActor(Actor):
     """The spawned orchestrator: each message starts one :class:`_GraphRun`
-    and responds with its promise (paper §3.5 response delegation)."""
+    and responds with its promise (paper §3.5 response delegation).
 
-    def __init__(self, plan: _Plan):
+    Runs entered through the mailbox keep ``allow_inline=False``: pools
+    and chunk schedulers issue ``request``\\ s while holding their own
+    locks, and running whole graph traversals synchronously under those
+    locks would serialize their dispatch. The inline fast path belongs to
+    :meth:`GraphRef.ask`, whose caller blocks on the result anyway."""
+
+    def __init__(self, plan: GraphPlan):
         super().__init__()
         self.plan = plan
 
@@ -794,9 +1081,45 @@ class _GraphActor(Actor):
 class GraphRef(ActorRef):
     """An :class:`ActorRef` to a built graph, plus build artifacts:
     ``placements`` (node path → Device), ``node_refs`` (node path →
-    ActorRef), and the plan used by Pipeline inlining."""
+    ActorRef), and the plan used by Pipeline inlining (which also carries
+    ``plan.fused_regions`` and the dispatch counters behind
+    :attr:`dispatch_stats`).
+
+    :meth:`ask` runs the plan **directly on the calling thread** instead
+    of hopping through the orchestrator's mailbox, with the
+    inline-dispatch fast path enabled: on a fused linear chain a request
+    costs one jit call plus plain function dispatch — the paper's
+    "negligible overhead" claim. ``send``/``request`` keep the ordinary
+    mailbox path (and with it PR 5's supervision semantics end to end).
+    """
 
     __slots__ = ("plan", "placements", "node_refs")
+
+    @property
+    def dispatch_stats(self) -> dict:
+        """Cumulative ``{"inline": n, "mailbox": m}`` dispatch counts
+        across every run of this graph since build."""
+        with self.plan._counters_lock:
+            return dict(self.plan.counters)
+
+    def ask(self, *payload: Any, timeout: Any = _UNSET) -> Any:
+        st = self._system._actors.get(self.actor_id)
+        if st is None or not st.alive:
+            # dead/killed orchestrator: fall through to the mailbox path
+            # so the caller sees the same ActorFailed it always did
+            return super().ask(*payload, timeout=timeout)
+        if timeout is _UNSET:
+            timeout = getattr(self._system, "default_ask_timeout", 120.0)
+        out: Future = Future()
+        _GraphRun(self.plan, payload, out, allow_inline=True).start()
+        try:
+            return out.result(timeout=timeout)
+        except FuturesTimeout:
+            if out.done():
+                raise       # the graph itself raised a TimeoutError
+            raise FuturesTimeout(
+                f"ask() timed out after {timeout}s waiting on graph "
+                f"{self.plan.name!r}") from None
 
     def __repr__(self):
         return (f"GraphRef#{self.actor_id}({self.plan.name!r}, "
@@ -829,10 +1152,15 @@ class _GraphRun:
     leaves no live intermediate refs behind, on success *or* failure.
     """
 
-    def __init__(self, plan: _Plan, payload: tuple, out: Future):
+    def __init__(self, plan: GraphPlan, payload: tuple, out: Future,
+                 allow_inline: bool = False):
         self.plan = plan
         self.payload = payload
         self.out = out
+        #: GraphRef.ask sets this: dispatch inline-eligible nodes by
+        #: calling their behavior on this thread (caller blocks on the
+        #: result anyway); mailbox-entered runs never do
+        self.allow_inline = allow_inline
         # request() may complete synchronously in the issuing thread, so
         # the callback can re-enter while we still hold the lock
         self.lock = threading.RLock()
@@ -938,7 +1266,12 @@ class _GraphRun:
                 self._fire_select(idx, node, vals[0], stack)
             else:  # actor-backed
                 if any(v is _DEAD for v in vals):
-                    self._produce(idx, [_DEAD] * node.n_out, stack)
+                    # deadness skips the whole fused region: attribute the
+                    # dead outputs to the region tail, as a reply would be
+                    out_idx = self.plan.produce_as.get(idx, idx)
+                    self._produce(out_idx,
+                                  [_DEAD] * self.plan.nodes[out_idx].n_out,
+                                  stack)
                     continue
                 if node.splat:
                     v = vals[0]
@@ -968,21 +1301,47 @@ class _GraphRun:
 
     # -- async continuation ---------------------------------------------
     def _issue(self, requests: List[Tuple[int, tuple]]) -> None:
+        plan = self.plan
         for idx, args in requests:
-            ref = self.plan.refs[idx]
+            ref = plan.refs[idx]
+            if self.allow_inline and plan.inline_ok.get(idx):
+                try:
+                    ok, result = ref._system.try_call_inline(
+                        ref.actor_id, args)
+                except Exception as exc:
+                    # the behavior raised: the actor is already terminated
+                    # (monitors notified) — identical to the mailbox path
+                    plan.count_dispatch("inline")
+                    self._finish_node(idx, None, exc)
+                    continue
+                if ok:
+                    plan.count_dispatch("inline")
+                    if isinstance(result, Future):
+                        # behavior delegated to a promise: continue async
+                        result.add_done_callback(
+                            lambda f, idx=idx: self._on_node_done(idx, f))
+                    else:
+                        self._finish_node(idx, result, None)
+                    continue
+                # miss (queued messages / concurrent drain / monitors
+                # attached since build): fall back to the mailbox
+            plan.count_dispatch("mailbox")
             fut = ref.request(*args)
             fut.add_done_callback(
                 lambda f, idx=idx: self._on_node_done(idx, f))
 
     def _on_node_done(self, idx: int, fut: Future) -> None:
+        exc = fut.exception()
+        self._finish_node(idx, None if exc is not None else fut.result(), exc)
+
+    def _finish_node(self, idx: int, result: Any,
+                     exc: Optional[BaseException]) -> None:
         requests: List[Tuple[int, tuple]] = []
         with self.lock:
             self.inflight -= 1
-            exc = fut.exception()
             if exc is not None:
                 self._record_failure(exc)
             else:
-                result = fut.result()
                 for r in _iter_refs(result):
                     if self.finished:
                         # a straggler (merge loser) finished after the run
@@ -992,7 +1351,10 @@ class _GraphRun:
                     else:
                         self.refs[id(r)] = r
                 if self.failed is None and not self.finished:
-                    node = self.plan.nodes[idx]
+                    # a fused head replies for its whole region: outputs
+                    # belong to the region *tail*'s ports
+                    out_idx = self.plan.produce_as.get(idx, idx)
+                    node = self.plan.nodes[out_idx]
                     if node.n_out > 1:
                         if not isinstance(result, tuple) or \
                                 len(result) != node.n_out:
@@ -1001,11 +1363,11 @@ class _GraphRun:
                                 f"outputs, actor returned {result!r}"))
                         else:
                             stack: List[int] = []
-                            self._produce(idx, list(result), stack)
+                            self._produce(out_idx, list(result), stack)
                             self._drain(stack, requests)
                     else:
                         stack = []
-                        self._produce(idx, [result], stack)
+                        self._produce(out_idx, [result], stack)
                         self._drain(stack, requests)
         self._issue(requests)
         self._settle()

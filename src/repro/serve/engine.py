@@ -357,7 +357,14 @@ class ServeEngine:
                 # the model step is a built dataflow graph (multi-kernel
                 # DAG); replicas share the graph's node actors, so the
                 # pool here buys step pipelining + crash replay, not
-                # extra device parallelism
+                # extra device parallelism. An *unbuilt* Graph is accepted
+                # and built with the trace-time fusion pass — contiguous
+                # kernel runs in the decode step collapse into single
+                # jitted dispatches, and the worker's step_graph.ask()
+                # rides the inline-dispatch fast path
+                from repro.core.graph import Graph as _Graph
+                if isinstance(step_graph, _Graph):
+                    step_graph = step_graph.build(fuse=True)
                 behavior = make_graph_decode_worker(
                     step_graph, combine=combine, split=split,
                     timeout=step_timeout)
