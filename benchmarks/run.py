@@ -13,11 +13,11 @@ import time
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_graph, bench_indexing, bench_iterated,
-                   bench_kvpool, bench_net, bench_offload, bench_overhead,
-                   bench_serve, bench_spawn)
+                   bench_kvpool, bench_mesh, bench_net, bench_offload,
+                   bench_overhead, bench_serve, bench_spawn)
     for mod in (bench_spawn, bench_overhead, bench_iterated, bench_offload,
                 bench_indexing, bench_serve, bench_kvpool, bench_graph,
-                bench_net):
+                bench_net, bench_mesh):
         mod.run()
     print("\n== roofline table (from dry-run artifacts) ==")
     from . import roofline_table

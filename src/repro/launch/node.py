@@ -33,9 +33,14 @@ def run_worker(addr: Tuple[str, int], name: str, *,
     shut down. Runs in a fresh process, so imports stay inside."""
     from repro.core import ActorSystem
     from repro.net import NodeRuntime
+    from repro.serve.mesh import local_replica_stats
 
     system = ActorSystem(name, max_workers=max_workers)
     node = NodeRuntime(system, name=name, compress=compress)
+    # any EngineReplica the driver spawn_remotes here reports its load
+    # through peer_stats (a mesh router reads this out of band of the
+    # per-replica "stats" message path)
+    node.add_stats_provider("serve", local_replica_stats)
     try:
         node.connect(tuple(addr))
         node.join(timeout=timeout)

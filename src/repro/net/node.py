@@ -36,6 +36,8 @@ import time
 from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from concurrent.futures import TimeoutError as FuturesTimeout
+
 from repro.core.actor import (Actor, ActorRef, ActorSystem, Message,
                               _safe_set_exception, _safe_set_result)
 from repro.core.errors import ActorError, ActorFailed, DownMessage, ExitMessage
@@ -43,6 +45,11 @@ from repro.core.errors import ActorError, ActorFailed, DownMessage, ExitMessage
 from . import wire
 
 __all__ = ["NodeRuntime", "RemoteActorRef", "NodeDown", "PayloadError"]
+
+#: distinguishes "caller passed no timeout" from an explicit ``None``
+#: (= wait forever) in the node-level RPCs (peer_stats, remote_actor,
+#: spawn_remote) — mirrors ``ActorRef.ask``
+_UNSET = object()
 
 
 class NodeDown(ActorFailed):
@@ -177,19 +184,27 @@ class NodeRuntime:
     unspill_device : where inbound refs land (``Device`` wrapper, bare
         ``jax.Device``, or None for the process default) — the paper's
         "receiver chooses" policy.
+    rpc_timeout : default timeout for the node-level RPCs (``peer_stats``,
+        ``remote_actor``, ``spawn_remote``); unset inherits the wrapped
+        system's ``default_ask_timeout``, so cluster-wide latency policy is
+        configured in one place instead of per-call constants. An explicit
+        ``None`` waits forever.
     """
 
     def __init__(self, system: ActorSystem, name: Optional[str] = None,
                  listen: Optional[Tuple[str, int]] = None, *,
                  compress: bool = False, unspill_device=None,
                  heartbeat_interval: float = 1.0,
-                 heartbeat_timeout: float = 5.0):
+                 heartbeat_timeout: float = 5.0,
+                 rpc_timeout: Any = _UNSET):
         self.system = system
         self.name = name or f"node-{os.getpid():x}"
         self.compress = compress
         self.unspill_device = unspill_device
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
+        self.rpc_timeout = (getattr(system, "default_ask_timeout", 120.0)
+                            if rpc_timeout is _UNSET else rpc_timeout)
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self._conns: Dict[str, _Conn] = {}
@@ -204,6 +219,13 @@ class NodeRuntime:
         self._dead_remote: set = set()
         self._dead_peers: set = set()
         self._closed = False
+        #: set by shutdown(); sleep-free loops (heartbeat) wait on it so a
+        #: node leaves the cluster promptly instead of lingering up to a
+        #: full interval in time.sleep (mesh scale-in inherits that latency)
+        self._closed_evt = threading.Event()
+        #: extra peer_stats sections: name -> zero-arg callable merged into
+        #: the "stats" rpc reply (e.g. the serve mesh's replica load report)
+        self._stats_providers: Dict[str, Callable[[], Any]] = {}
         self.stats = {"frames_in": 0, "frames_out": 0, "frames_bad": 0,
                       "peers_lost": 0}
         self._broker = system.spawn(_Broker(self))
@@ -272,35 +294,80 @@ class NodeRuntime:
             self._published[name] = ref
         return ref
 
+    def _rpc_result(self, peer: str, fut: Future, timeout: Any,
+                    what: str) -> Any:
+        """Await a node-level rpc reply with the configured timeout. On
+        expiry the raised TimeoutError names the peer and its last-rx age
+        — a wedged-but-talking peer (recent rx) is distinguishable from a
+        silently dead one (stale rx) from the exception alone."""
+        if timeout is _UNSET:
+            timeout = self.rpc_timeout
+        try:
+            return fut.result(timeout)
+        except FuturesTimeout:
+            if fut.done():
+                raise  # the rpc itself returned a TimeoutError result
+            with self._lock:
+                conn = self._conns.get(peer)
+            if conn is None:
+                age = "never connected"
+            else:
+                age = (f"last rx {time.monotonic() - conn.last_rx:.1f}s ago, "
+                       f"conn {'alive' if conn.alive else 'dead'}")
+            raise FuturesTimeout(
+                f"{what} to node {peer!r} timed out after {timeout}s "
+                f"({age})") from None
+
     def remote_actor(self, peer: str, name: str,
-                     timeout: float = 30.0) -> RemoteActorRef:
+                     timeout: Any = _UNSET) -> RemoteActorRef:
         """Look up an actor ``peer`` published under ``name``."""
-        rid = self._rpc(peer, "lookup", (name,)).result(timeout)
+        rid = self._rpc_result(peer, self._rpc(peer, "lookup", (name,)),
+                               timeout, f"remote_actor({name!r})")
         return RemoteActorRef(self, peer, rid)
 
     def spawn_remote(self, peer: str, behavior, *args, publish=None,
-                     timeout: float = 60.0) -> RemoteActorRef:
+                     timeout: Any = _UNSET) -> RemoteActorRef:
         """Spawn ``behavior`` (a picklable callable / Actor subclass /
         KernelDecl) inside ``peer``'s actor system; optionally publish it
         there under ``publish``. Returns the network-transparent handle."""
-        rid = self._rpc(peer, "spawn",
-                        (behavior, args, publish)).result(timeout)
+        rid = self._rpc_result(peer,
+                               self._rpc(peer, "spawn",
+                                         (behavior, args, publish)),
+                               timeout, "spawn_remote")
         return RemoteActorRef(self, peer, rid)
 
-    def peer_stats(self, peer: str, timeout: float = 30.0) -> dict:
-        """The peer process's ``memory_stats()`` snapshot — how the
-        two-process tests assert one spill/unspill pair per wire hop on
-        *both* sides."""
-        return self._rpc(peer, "stats", ()).result(timeout)
+    def peer_stats(self, peer: str, timeout: Any = _UNSET) -> dict:
+        """The peer process's ``memory_stats()`` snapshot (plus any
+        sections the peer registered via :meth:`add_stats_provider`, e.g.
+        the serve mesh's per-replica load report) — how the two-process
+        tests assert one spill/unspill pair per wire hop on *both* sides,
+        and how a mesh router reads a worker node's load."""
+        return self._rpc_result(peer, self._rpc(peer, "stats", ()),
+                                timeout, "peer_stats")
+
+    def add_stats_provider(self, name: str,
+                           fn: Callable[[], Any]) -> None:
+        """Merge ``fn()`` into this node's ``peer_stats`` reply under
+        ``name``. A provider that raises contributes its error string
+        instead of failing the whole stats rpc."""
+        with self._lock:
+            self._stats_providers[name] = fn
 
     def shutdown(self) -> None:
         """Leave the cluster: graceful byes, close sockets, stop threads.
-        Idempotent; does not shut the wrapped ActorSystem down."""
+        Idempotent; does not shut the wrapped ActorSystem down.
+
+        Returns promptly: the heartbeat loop waits on an event rather than
+        sleeping through its interval, so a node with a long
+        ``heartbeat_interval`` still leaves in milliseconds (regression:
+        mesh scale-in used to inherit up to a full interval of latency per
+        released node)."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             conns = list(self._conns.values())
+        self._closed_evt.set()
         for c in conns:
             if c.alive:
                 try:
@@ -317,6 +384,10 @@ class NodeRuntime:
                             notify=False)
         with self._cv:
             self._cv.notify_all()
+        if threading.current_thread() is not self._hb_thread:
+            # the event above wakes the loop immediately, so this join is
+            # bounded by one liveness sweep, not by heartbeat_interval
+            self._hb_thread.join(timeout=5.0)
 
     def __enter__(self):
         return self
@@ -570,8 +641,10 @@ class NodeRuntime:
             self._broker.send(conn.peer, frame)
 
     def _heartbeat_loop(self) -> None:
-        while not self._closed:
-            time.sleep(self.heartbeat_interval)
+        # wait(interval) instead of time.sleep(interval): shutdown() sets
+        # the event, so the loop exits immediately instead of finishing a
+        # blind sleep first (slow-shutdown regression)
+        while not self._closed_evt.wait(self.heartbeat_interval):
             with self._lock:
                 conns = [c for c in self._conns.values() if c.alive]
             now = time.monotonic()
@@ -764,7 +837,17 @@ class NodeRuntime:
                 fut.set_result(ref.actor_id)
             elif op == "stats":
                 from repro.core.memref import memory_stats
-                fut.set_result(memory_stats())
+                snap = memory_stats()
+                with self._lock:
+                    providers = dict(self._stats_providers)
+                for pname, pfn in providers.items():
+                    try:
+                        snap[pname] = pfn()
+                    except Exception as exc:
+                        # one broken provider must not cost the whole
+                        # stats reply (routers poll this on every tick)
+                        snap[pname] = {"error": repr(exc)}
+                fut.set_result(snap)
             else:
                 raise ValueError(f"unknown rpc op {op!r}")
         except Exception as exc:

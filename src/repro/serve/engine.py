@@ -296,7 +296,8 @@ class ServeEngine:
                  step_timeout: float = 120.0,
                  queue: Optional[RequestQueue] = None, device=None,
                  combine: Optional[Callable] = None,
-                 split: Optional[Callable] = None):
+                 split: Optional[Callable] = None,
+                 jit_step: bool = True):
         self._paged = cache_pool is not None
         if self._paged:
             if prefill_fn is None:
@@ -370,7 +371,7 @@ class ServeEngine:
                     timeout=step_timeout)
             else:
                 behavior = make_decode_worker(step_fn, combine=combine,
-                                              split=split)
+                                              split=split, jit=jit_step)
             workers = [system.spawn(behavior) for _ in range(n_workers)]
             pool = ActorPool(system, workers, policy="least_loaded",
                              devices=[device] * len(workers))
@@ -491,6 +492,52 @@ class ServeEngine:
             s["prefill_dispatch"] = dict(self._prefill_scheduler.stats)
             s["pool"] = self.cache_pool.stats()
         return s
+
+    def load_snapshot(self) -> Dict[str, Any]:
+        """A small, cheap load summary for a mesh router's scheduling
+        tick: queue depth, the queue's EWMA-derived wait estimate, batch
+        occupancy, and the lifetime completed/failed counts. Unlike
+        :meth:`stats` this touches no latency reservoirs and builds no
+        nested dicts — it is polled per tick per replica."""
+        with self._ct_lock:
+            joined = self._counters["joined"]
+            left = self._counters["left"]
+            steps = self._counters["steps"]
+            slots = self._counters["batch_slots"]
+            completed = self._counters["completed"]
+            failed = self._counters["failed"]
+        return {
+            "queue_depth": len(self.queue),
+            "queue_wait_s": self.queue.estimated_wait(),
+            "active": joined - left,
+            "occupancy": (slots / (steps * self.max_batch)
+                          if steps else 0.0),
+            "max_batch": self.max_batch,
+            "steps": steps,
+            "completed": completed,
+            "failed": failed,
+        }
+
+    def drain_async(self) -> Future:
+        """Close admissions and drain in the background; the returned
+        future resolves (to the final :meth:`stats`) once everything
+        already queued has been served and the engine thread has exited.
+        This is the mesh scale-in entrypoint: the router stops routing to
+        the replica, calls this, and releases the node only after the
+        future resolves — so scale-in never sheds admitted work."""
+        fut: Future = Future()
+
+        def _drain() -> None:
+            try:
+                self.stop(drain=True)
+                fut.set_result(self.stats())
+            except BaseException as exc:  # pragma: no cover - defensive
+                if not fut.done():
+                    fut.set_exception(exc)
+
+        threading.Thread(target=_drain, name="serve-drain",
+                         daemon=True).start()
+        return fut
 
     # -- engine loop -------------------------------------------------------
     def _loop(self) -> None:

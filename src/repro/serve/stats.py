@@ -7,6 +7,7 @@ unit the paper's sub-second-duty argument is made in.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 from typing import Dict, Optional
 
@@ -19,20 +20,37 @@ class LatencyStats:
     Bounded: past ``maxlen`` samples the oldest half is dropped, so a
     long-lived engine never grows without bound while percentiles stay
     dominated by recent traffic.
+
+    Percentile queries are O(1): an ordered view is maintained
+    incrementally on ``record`` (``bisect.insort``) instead of re-sorting
+    the full reservoir per call. A mesh router polls every replica's stats
+    on each scheduling tick, so ``summary()``/``percentile()`` must stay
+    cheap no matter how full the reservoir is (the old per-call sort was
+    O(n log n) over up to 100k samples — per tick, per replica).
     """
 
     def __init__(self, maxlen: int = 100_000):
         self._lock = threading.Lock()
-        self._samples: list[float] = []
+        self._samples: list[float] = []    # arrival order (drives eviction)
+        self._ordered: list[float] = []    # same samples, kept sorted
+        self._sum = 0.0                    # running sum of the reservoir
         self._maxlen = maxlen
         self._count = 0
 
     def record(self, seconds: float) -> None:
+        s = float(seconds)
         with self._lock:
             self._count += 1
-            self._samples.append(float(seconds))
+            self._samples.append(s)
+            bisect.insort(self._ordered, s)
+            self._sum += s
             if len(self._samples) > self._maxlen:
+                dropped = self._samples[:self._maxlen // 2]
                 del self._samples[:self._maxlen // 2]
+                self._sum -= sum(dropped)
+                # one O(n log n) rebuild per maxlen/2 records, amortized
+                # O(log n) per record — never on the query path
+                self._ordered = sorted(self._samples)
 
     @staticmethod
     def _rank(ordered: list, p: float) -> float:
@@ -45,27 +63,24 @@ class LatencyStats:
         """The ``p``-th percentile in seconds (nearest-rank); 0.0 when no
         samples were recorded yet."""
         with self._lock:
-            if not self._samples:
+            if not self._ordered:
                 return 0.0
-            ordered = sorted(self._samples)
-        return self._rank(ordered, p)
+            return self._rank(self._ordered, p)
 
     def summary(self) -> Dict[str, float]:
         with self._lock:
-            samples = list(self._samples)
-            count = self._count
-        if not samples:
-            return {"count": count, "p50_ms": 0.0, "p95_ms": 0.0,
-                    "p99_ms": 0.0, "mean_ms": 0.0, "max_ms": 0.0}
-        ordered = sorted(samples)
-        return {
-            "count": count,
-            "p50_ms": self._rank(ordered, 50) * 1e3,
-            "p95_ms": self._rank(ordered, 95) * 1e3,
-            "p99_ms": self._rank(ordered, 99) * 1e3,
-            "mean_ms": sum(ordered) / len(ordered) * 1e3,
-            "max_ms": ordered[-1] * 1e3,
-        }
+            if not self._ordered:
+                return {"count": self._count, "p50_ms": 0.0, "p95_ms": 0.0,
+                        "p99_ms": 0.0, "mean_ms": 0.0, "max_ms": 0.0}
+            ordered = self._ordered
+            return {
+                "count": self._count,
+                "p50_ms": self._rank(ordered, 50) * 1e3,
+                "p95_ms": self._rank(ordered, 95) * 1e3,
+                "p99_ms": self._rank(ordered, 99) * 1e3,
+                "mean_ms": self._sum / len(ordered) * 1e3,
+                "max_ms": ordered[-1] * 1e3,
+            }
 
 
 class EWMA:

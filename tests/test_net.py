@@ -460,3 +460,80 @@ def test_actor_ref_refuses_pickle():
             pickle.dumps(ref)
     finally:
         s.shutdown()
+
+
+# ----------------------------------------------------------------------------
+# runtime-loop bugfix regressions (ISSUE 8 satellites)
+# ----------------------------------------------------------------------------
+def test_shutdown_returns_promptly_despite_long_heartbeat_interval():
+    """shutdown() must not linger in the heartbeat loop's sleep: the loop
+    waits on an Event that shutdown sets, so a node with a 5 s interval
+    still leaves in milliseconds (mesh scale-in releases nodes on this
+    path, one per replica)."""
+    s = ActorSystem("hb-shutdown", max_workers=2)
+    node = NodeRuntime(s, name="hb", heartbeat_interval=5.0)
+    try:
+        time.sleep(0.05)             # heartbeat thread is mid-wait now
+        t0 = time.monotonic()
+        node.shutdown()
+        elapsed = time.monotonic() - t0
+        assert elapsed < 0.5, f"shutdown took {elapsed:.2f}s"
+        assert not node._hb_thread.is_alive()   # joined, not abandoned
+    finally:
+        node.shutdown()
+        s.shutdown()
+
+
+def test_peer_stats_timeout_honors_node_config():
+    """peer_stats used to hardcode timeout=30.0 (the ActorPool-120s /
+    ask-120s class of bug); it now defaults from the node's rpc_timeout
+    (itself from the system's default_ask_timeout), and the TimeoutError
+    names the unresponsive peer and its last-rx age."""
+    from concurrent.futures import TimeoutError as FuturesTimeout
+
+    sa = ActorSystem("rpc-a", max_workers=2)
+    sb = ActorSystem("rpc-b", max_workers=2)
+    na = NodeRuntime(sa, name="a", listen=("127.0.0.1", 0),
+                     rpc_timeout=0.3)
+    nb = NodeRuntime(sb, name="b")
+    try:
+        nb.connect(na.address)
+        assert na.wait_for_peer("b", 10)
+        nb._on_rpc = lambda *a, **k: None     # b goes mute on rpcs
+        t0 = time.monotonic()
+        with pytest.raises(FuturesTimeout) as ei:
+            na.peer_stats("b")
+        elapsed = time.monotonic() - t0
+        assert elapsed < 5.0, f"configured 0.3s timeout took {elapsed:.2f}s"
+        msg = str(ei.value)
+        assert "'b'" in msg and "last rx" in msg and "0.3" in msg, msg
+        # an explicit per-call timeout still overrides the node default
+        t0 = time.monotonic()
+        with pytest.raises(FuturesTimeout):
+            na.peer_stats("b", timeout=0.1)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        na.shutdown()
+        nb.shutdown()
+        sa.shutdown()
+        sb.shutdown()
+
+
+def test_rpc_timeout_inherits_system_default_ask_timeout():
+    s = ActorSystem("rpc-default", max_workers=2, default_ask_timeout=7.5)
+    node = NodeRuntime(s, name="n")
+    try:
+        assert node.rpc_timeout == 7.5
+    finally:
+        node.shutdown()
+        s.shutdown()
+
+
+def test_stats_provider_merges_and_survives_broken_provider(pair):
+    sa, sb, na, nb = pair
+    nb.add_stats_provider("good", lambda: {"v": 1})
+    nb.add_stats_provider("bad", lambda: 1 / 0)
+    snap = na.peer_stats("b", timeout=30)
+    assert snap["good"] == {"v": 1}
+    assert "error" in snap["bad"]          # one broken provider is isolated
+    assert "spills" in snap                # base memory_stats still present
