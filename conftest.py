@@ -4,10 +4,24 @@ Installs the vendored ``repro._compat.minihypothesis`` under the
 ``hypothesis`` name when the real library is not importable, so
 ``tests/test_property.py`` collects and runs in hermetic containers.
 The real package always wins when present.
+
+With ``REPRO_ANALYSIS=1`` this file is also the dynamic-analysis pytest
+plugin (see ``repro.analysis.runtime``):
+
+* every runtime lock is a ``TrackedLock``/``TrackedRLock`` (the
+  ``make_lock`` seam reads the env var at construction), so
+  ordering violations raise inside the offending test;
+* a per-test **DeviceRef leak sentinel** fails any test that ends with
+  more live refs than it started with (opt out with
+  ``@pytest.mark.ref_leak_ok`` for tests that intentionally leak);
+* the terminal summary prints the observed lock-order graph and fails
+  the session if any acquisition cycle or recorded violation survived.
 """
 import importlib.util
 import os
 import sys
+
+import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
 
@@ -16,3 +30,76 @@ if importlib.util.find_spec("hypothesis") is None:
 
     sys.modules["hypothesis"] = _mh
     sys.modules["hypothesis.strategies"] = _mh.strategies
+
+
+def _analysis_on() -> bool:
+    from repro.analysis.runtime import analysis_enabled
+    return analysis_enabled()
+
+
+@pytest.fixture(autouse=True)
+def _device_ref_leak_sentinel(request):
+    """Fail a test that leaks DeviceRefs (REPRO_ANALYSIS=1 only).
+
+    Autouse fixtures set up first and tear down *last*, so every other
+    function-scoped fixture (actor systems, pools, engines) has already
+    released its refs by the time the check runs. The settle loop gives
+    GC and in-flight done-callbacks a moment to catch up before calling
+    growth a leak.
+    """
+    if not _analysis_on():
+        yield
+        return
+    if request.node.get_closest_marker("ref_leak_ok"):
+        yield
+        return
+    from repro.core.memref import live_ref_count
+
+    from repro.analysis.runtime import settled_ref_growth
+
+    before = live_ref_count()
+    yield
+    growth = settled_ref_growth(before)
+    if growth > 0:
+        pytest.fail(
+            f"DeviceRef leak: {growth} ref(s) still live after the test "
+            f"(started at {before}) — release/donate them or mark the "
+            "test with @pytest.mark.ref_leak_ok", pytrace=False)
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not _analysis_on():
+        return
+    from repro.analysis.runtime import (lock_order_cycles, lock_order_graph,
+                                        recorded_violations,
+                                        same_name_nestings)
+
+    tr = terminalreporter
+    graph = lock_order_graph()
+    cycles = lock_order_cycles()
+    violations = recorded_violations()
+    tr.write_sep("-", "repro.analysis lock-order summary")
+    if not graph:
+        tr.write_line("no nested lock acquisitions observed")
+    for a, bs in sorted(graph.items()):
+        for b, site in sorted(bs.items()):
+            tr.write_line(f"  {a} -> {b}  (first seen {site})")
+    for name, site in sorted(same_name_nestings().items()):
+        tr.write_line(f"  same-name nesting: {name} ({site})")
+    for v in violations:
+        tr.write_line(f"  VIOLATION: {v}")
+    for c in cycles:
+        tr.write_line(f"  CYCLE: {' -> '.join(c)}")
+    tr.write_line(f"{len(graph)} source lock(s), {len(cycles)} cycle(s), "
+                  f"{len(violations)} violation(s)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """A cycle or recorded violation fails the session even if every
+    individual test swallowed the raised LockOrderViolation."""
+    if not _analysis_on():
+        return
+    from repro.analysis.runtime import lock_order_cycles, recorded_violations
+
+    if lock_order_cycles() or recorded_violations():
+        session.exitstatus = 1

@@ -28,6 +28,7 @@ from concurrent.futures import Future, InvalidStateError, ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Optional, Tuple
 
+from ..analysis.runtime import make_lock
 from .errors import ActorFailed, DownMessage, ExitMessage, MailboxClosed
 
 __all__ = ["Actor", "ActorRef", "ActorSystem", "Message"]
@@ -183,7 +184,7 @@ class _ActorState:
     def __init__(self, actor: Actor):
         self.actor = actor
         self.mailbox: deque = deque()
-        self.lock = threading.Lock()
+        self.lock = make_lock("ActorState")
         self.scheduled = False
         self.alive = True
         self.reason: Any = None
@@ -215,7 +216,7 @@ class ActorSystem:
                                             thread_name_prefix=f"{name}-sched")
         self._actors: dict[int, _ActorState] = {}
         self._ids = itertools.count(1)
-        self._registry_lock = threading.Lock()
+        self._registry_lock = make_lock("ActorSystem")
         self._shutdown = False
         self._manager = None
         self.stats = {"spawned": 0, "messages": 0, "inline_calls": 0}
@@ -464,7 +465,7 @@ class ActorSystem:
         try:
             st.actor.on_exit(reason)
         except Exception:  # pragma: no cover - cleanup must not crash runtime
-            pass
+            pass  # lint: on_exit is user code; the drain loop must survive it
         for m in monitors:
             m.send(DownMessage(actor_id, reason))
         for l in links:

@@ -39,11 +39,11 @@ from __future__ import annotations
 
 import inspect
 import itertools
-import threading
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, List, Optional, Sequence, Union
 
+from ..analysis.runtime import make_lock
 from .actor import ActorRef, ActorSystem
 from .memref import payload_device
 from .signature import KernelSignature, NDRange
@@ -411,7 +411,7 @@ class ActorPool:
         self._devices = {w.actor_id: d for w, d in zip(self._workers, devices)}
         self._outstanding = {w.actor_id: 0 for w in self._workers}
         self._rr = itertools.count()
-        self._lock = threading.Lock()
+        self._lock = make_lock("ActorPool")
 
     # -- membership ------------------------------------------------------
     @property

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.runtime import make_lock, make_rlock
 from .actor import _UNSET, Actor, ActorRef, ActorSystem
 from .api import KernelDecl, _bound_fn
 from .errors import (ArityMismatchError, DanglingPortError, GraphCycleError,
@@ -1018,7 +1019,7 @@ class GraphPlan:
         self.produce_as = dict(tail_of or {})
         self.inline_ok = dict(inline_ok or {})
         self.counters = {"inline": 0, "mailbox": 0}
-        self._counters_lock = threading.Lock()
+        self._counters_lock = make_lock("GraphCounters")
         self.chain_refs = self._linear_chain()
 
     def count_dispatch(self, kind: str) -> None:
@@ -1163,7 +1164,7 @@ class _GraphRun:
         self.allow_inline = allow_inline
         # request() may complete synchronously in the issuing thread, so
         # the callback can re-enter while we still hold the lock
-        self.lock = threading.RLock()
+        self.lock = make_rlock("GraphRun")
         n = len(plan.nodes)
         self.slot_vals: List[List[Any]] = [[None] * node.n_in
                                            for node in plan.nodes]
@@ -1411,4 +1412,4 @@ class _GraphRun:
             try:
                 r.release()
             except Exception:       # pragma: no cover - defensive
-                pass
+                pass  # lint: reclaiming a failed run's refs is best-effort

@@ -14,12 +14,12 @@ platform / device / program).
 """
 from __future__ import annotations
 
-import threading
 import warnings
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 
+from ..analysis.runtime import make_lock
 from .signature import NDRange
 
 __all__ = ["Platform", "Device", "Program", "DeviceManager"]
@@ -33,7 +33,7 @@ class Device:
         self.jax_device = jax_device
         self.platform = platform
         self._inflight = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock("Device")
 
     @property
     def name(self) -> str:
@@ -100,7 +100,7 @@ class Program:
         self.device = device
         self.options = dict(options or {})
         self._cache: Dict[Any, Any] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("Program")
 
     def retrieve(self, name: str) -> Callable:
         try:
@@ -122,7 +122,7 @@ class DeviceManager:
     def __init__(self, system):
         self.system = system
         self._platforms: Optional[list[Platform]] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("DeviceManager")
 
     # -- discovery ------------------------------------------------------
     @property

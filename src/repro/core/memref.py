@@ -29,13 +29,13 @@ host-transfer counters the zero-copy tests assert on.
 """
 from __future__ import annotations
 
-import threading
 import weakref
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
+from ..analysis.runtime import make_rlock
 from .errors import AccessViolation
 
 __all__ = [
@@ -63,7 +63,7 @@ def _device_of(arr) -> Optional[jax.Device]:
         if len(devs) == 1:
             return next(iter(devs))
     except Exception:  # pragma: no cover - tracers / older jax
-        pass
+        pass  # lint: device probe; tracers and older jax lack .devices()
     dev = getattr(arr, "device", None)
     return dev if isinstance(dev, jax.Device) else None
 
@@ -81,7 +81,10 @@ class RefRegistry:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        # reentrant: DeviceRef.__del__ releases through the registry, so
+        # a GC pass triggered inside a locked registry method re-enters
+        # this lock on the same thread (see analysis/ORDER.md, rank 19)
+        self._lock = make_rlock("RefRegistry")
         self._count = 0
         self._bytes: Dict[Any, int] = {}
         self._peak: Dict[Any, int] = {}
@@ -481,7 +484,7 @@ class DeviceRef:
         try:
             self.release()
         except Exception:
-            pass
+            pass  # lint: finalizers must never raise
 
     # -- distribution policy -------------------------------------------------
     def __reduce__(self):

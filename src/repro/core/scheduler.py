@@ -31,6 +31,7 @@ import time
 from concurrent.futures import Future
 from typing import Any, Callable, List, Optional, Sequence
 
+from ..analysis.runtime import make_rlock
 from .actor import ActorRef
 from .errors import DeadlineExceeded
 from .memref import payload_device, tree_release
@@ -132,7 +133,7 @@ class ChunkScheduler:
         # re-entrant: a request that completes before its done-callback is
         # registered runs on_done synchronously in the issuing thread,
         # which already holds this lock
-        self._lock = threading.RLock()
+        self._lock = make_rlock("ChunkScheduler")
         self._cv = threading.Condition(self._lock)
         self.stats = {"dispatched": 0, "speculative": 0, "failed": 0,
                       "expired": 0}

@@ -23,7 +23,6 @@ What it demonstrates (the PR's acceptance criteria):
 from __future__ import annotations
 
 import threading
-import time
 from typing import Optional, Tuple
 
 __all__ = ["main", "run_child"]
@@ -31,6 +30,15 @@ __all__ = ["main", "run_child"]
 #: per-chunk compute time for the kill-mid-run phase — long enough that
 #: chunks are in flight on the remote node when it is killed
 CHUNK_DELAY_S = 0.15
+
+#: never set — waited on with a timeout to simulate per-chunk compute.
+#: Behaviors must not time.sleep (blocking-call-in-behavior): an Event
+#: wait is interruptible in principle, a sleep never is.
+_simulated_work = threading.Event()
+
+
+def _simulate_compute() -> None:
+    _simulated_work.wait(CHUNK_DELAY_S)
 
 
 # ----------------------------------------------------------------------------
@@ -44,7 +52,7 @@ def stage_square(ref):
 
 def chunk_work(i: int):
     """A deliberately slow chunk for the kill-mid-run phase."""
-    time.sleep(CHUNK_DELAY_S)
+    _simulate_compute()
     return ("remote", i)
 
 
@@ -57,9 +65,12 @@ def run_child(addr: Tuple[str, int], name: str, compress: bool) -> None:
     system = ActorSystem(name)
     node = NodeRuntime(system, name=name, compress=compress)
     try:
-        node.connect(tuple(addr))
+        # publish BEFORE connecting: the driver's wait_for_peer returns as
+        # soon as the hello handshake lands, so a lookup RPC can arrive
+        # immediately — publishing after connect loses that race
         node.publish("stage-square", system.spawn(stage_square))
         node.publish("chunk-worker", system.spawn(chunk_work))
+        node.connect(tuple(addr))
         node.join()
     finally:
         node.shutdown()
@@ -129,7 +140,7 @@ def main(n: int = 4096, chunks: int = 12, *, compress: bool = True,
         # -- phase 2: kill the worker node mid-run -------------------------
         remote_worker = node.remote_actor("worker", "chunk-worker", timeout)
         local_worker = system.spawn(
-            lambda i: (time.sleep(CHUNK_DELAY_S), ("local", i))[1])
+            lambda i: (_simulate_compute(), ("local", i))[1])
         downs: list = []
         got_down = threading.Event()
         watcher = system.spawn(lambda m: (downs.append(m), got_down.set()))

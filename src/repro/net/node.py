@@ -33,6 +33,7 @@ import pickle
 import socket
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -40,6 +41,7 @@ from concurrent.futures import TimeoutError as FuturesTimeout
 
 from repro.core.actor import (Actor, ActorRef, ActorSystem, Message,
                               _safe_set_exception, _safe_set_result)
+from repro.analysis.runtime import make_lock, make_rlock
 from repro.core.errors import ActorError, ActorFailed, DownMessage, ExitMessage
 
 from . import wire
@@ -155,7 +157,7 @@ class _Conn:
         self.sock = sock
         self.alive = True
         self.last_rx = time.monotonic()
-        self.wlock = threading.Lock()
+        self.wlock = make_lock("ConnWrite")
         self.reader: Optional[threading.Thread] = None
 
 
@@ -205,7 +207,7 @@ class NodeRuntime:
         self.heartbeat_timeout = heartbeat_timeout
         self.rpc_timeout = (getattr(system, "default_ask_timeout", 120.0)
                             if rpc_timeout is _UNSET else rpc_timeout)
-        self._lock = threading.RLock()
+        self._lock = make_rlock("NodeRuntime")
         self._cv = threading.Condition(self._lock)
         self._conns: Dict[str, _Conn] = {}
         self._pending: Dict[int, tuple] = {}   # req_id -> (peer, rid, Future)
@@ -227,7 +229,10 @@ class NodeRuntime:
         #: the "stats" rpc reply (e.g. the serve mesh's replica load report)
         self._stats_providers: Dict[str, Callable[[], Any]] = {}
         self.stats = {"frames_in": 0, "frames_out": 0, "frames_bad": 0,
-                      "peers_lost": 0}
+                      "peers_lost": 0, "errors_swallowed": 0}
+        #: last N exceptions a service loop chose to survive — surfaced
+        #: through the "stats" rpc so swallowed faults stay observable
+        self._swallowed: deque = deque(maxlen=32)
         self._broker = system.spawn(_Broker(self))
         self._listener: Optional[socket.socket] = None
         if listen is not None:
@@ -353,6 +358,17 @@ class NodeRuntime:
         with self._lock:
             self._stats_providers[name] = fn
 
+    def _note_error(self, where: str, exc: BaseException) -> None:
+        """Record an exception a service loop survived. deque.append is
+        atomic, so no lock: callers are reader/accept threads that must
+        never block on runtime state."""
+        self._swallowed.append((where, repr(exc)))
+        self.stats["errors_swallowed"] += 1
+
+    def swallowed_errors(self) -> list:
+        """The last few survived exceptions, newest last."""
+        return list(self._swallowed)
+
     def shutdown(self) -> None:
         """Leave the cluster: graceful byes, close sockets, stop threads.
         Idempotent; does not shut the wrapped ActorSystem down.
@@ -372,7 +388,7 @@ class NodeRuntime:
             if c.alive:
                 try:
                     self._write(c, ("bye",))
-                except Exception:
+                except Exception:  # lint: best-effort farewell on a closing link
                     pass
         if self._listener is not None:
             try:
@@ -589,7 +605,10 @@ class NodeRuntime:
                 wire.write_frame(sock, wire.encode_frame(("hello", self.name)))
                 sock.settimeout(None)
                 self._register_conn(frame[1], sock)
-            except Exception:
+            except Exception as exc:
+                # a failed handshake must not kill the accept loop, but
+                # the fault stays visible in peer_stats
+                self._note_error("accept", exc)
                 try:
                     sock.close()
                 except OSError:
@@ -616,13 +635,14 @@ class NodeRuntime:
             self.stats["frames_in"] += 1
             try:
                 frame = wire.decode_frame(data)
-            except Exception:
+            except Exception as exc:
                 # envelope frames are primitives-only, so this is a rare
                 # malformed/incompatible control frame (e.g. an exotic
                 # failure reason) — framing is length-prefixed, the stream
                 # is still in sync: skip it rather than killing every
                 # in-flight request on a healthy link
                 self.stats["frames_bad"] += 1
+                self._note_error(f"decode from {conn.peer}", exc)
                 continue
             tag = frame[0]
             if tag == "ping":
@@ -693,12 +713,10 @@ class NodeRuntime:
         for r in relays:
             r.exit(None)
         for _, (peer, rid, fut) in pending:
-            if not fut.done():
-                try:
-                    fut.set_exception(NodeDown(
-                        f"request to {peer}/{rid} lost: {reason}"))
-                except Exception:
-                    pass
+            # _safe_set_exception loses the race to a concurrent reply
+            # silently — that is the legal outcome, not a hidden fault
+            _safe_set_exception(fut, NodeDown(
+                f"request to {peer}/{rid} lost: {reason}"))
         if not notify:
             return
         for (peer, rid), refs in watchers:
@@ -729,8 +747,9 @@ class NodeRuntime:
             return
         try:
             payload = self._decode_payload(blob)
-        except Exception:
+        except Exception as exc:
             self.stats["frames_bad"] += 1   # fire-and-forget: drop it
+            self._note_error(f"send-payload from {peer}", exc)
             return
         self.system._enqueue(aid, Message(tuple(payload), None, None))
 
@@ -838,6 +857,8 @@ class NodeRuntime:
             elif op == "stats":
                 from repro.core.memref import memory_stats
                 snap = memory_stats()
+                snap["errors_swallowed"] = self.stats["errors_swallowed"]
+                snap["swallowed_errors"] = self.swallowed_errors()
                 with self._lock:
                     providers = dict(self._stats_providers)
                 for pname, pfn in providers.items():

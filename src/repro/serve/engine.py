@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import make_lock
 from repro.core.actor import ActorSystem
 from repro.core.api import ActorPool
 from repro.core.errors import DeadlineExceeded
@@ -405,7 +406,7 @@ class ServeEngine:
             "prefills": 0, "prefix_hits": 0, "respawned_prefill": 0,
         }
         # prefill threads and the decode loop both bump shared counters
-        self._ct_lock = threading.Lock()
+        self._ct_lock = make_lock("ServeEngine")
         self._max_step_gap = 0.0
         self._last_step_end: Optional[float] = None
         self._clock = time.monotonic

@@ -46,7 +46,6 @@ like any other ref payload and is out of scope here.
 from __future__ import annotations
 
 import math
-import threading
 from collections import OrderedDict
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
@@ -54,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import make_rlock
 from repro.core.errors import AccessViolation
 from repro.core.memref import DeviceRef, as_device_array, registry
 
@@ -183,7 +183,7 @@ class PagePool:
         self.device = getattr(device, "jax_device", device)
         # reentrant: eviction under allocation pressure releases pages
         # while the allocation already holds the lock
-        self._lock = threading.RLock()
+        self._lock = make_rlock("PagePool")
         self._pages: set = set()          # live Page objects (bookkeeping)
         self._live = 0
         self._peak = 0

@@ -57,6 +57,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.actor import (Actor, ActorRef, ActorSystem,
                               _safe_set_exception, _safe_set_result)
+from repro.analysis.runtime import make_lock
 from repro.core.errors import ActorError, ActorFailed, DownMessage
 
 from .engine import EngineStopped, ServeEngine
@@ -101,7 +102,7 @@ class ReplicaSpec:
 #: can expose per-replica load through ``peer_stats`` (see
 #: ``NodeRuntime.add_stats_provider``)
 _local_replicas: Dict[int, ServeEngine] = {}
-_local_lock = threading.Lock()
+_local_lock = make_lock("MeshLocalReplicas")
 
 
 def local_replica_stats() -> Dict[str, Any]:
@@ -261,7 +262,7 @@ class MeshRouter:
         self.route_by_prefix = route_by_prefix
         self.prefix_tokens = prefix_tokens
         self.spawn_targets = spawn_targets
-        self._lock = threading.Lock()
+        self._lock = make_lock("MeshRouter")
         self._replicas: Dict[str, _Replica] = {}
         self._req_ids = 0
         self._counters: Dict[str, int] = {
@@ -271,6 +272,7 @@ class MeshRouter:
         }
         self._clock = time.monotonic
         self._last_scale = self._clock()
+        self._last_scale_error: Optional[str] = None
         self._stop_evt = threading.Event()
         self._control: Optional[threading.Thread] = None
         self._front: Optional[ActorRef] = None
@@ -469,8 +471,11 @@ class MeshRouter:
             self._poll_replicas()
             try:
                 self._autoscale()
-            except Exception:
-                pass  # a failed scale action retries next tick
+            except Exception as exc:
+                # a failed scale action retries next tick, but the fault
+                # stays visible in stats() instead of vanishing
+                with self._lock:
+                    self._last_scale_error = repr(exc)
 
     def _poll_replicas(self) -> None:
         with self._lock:
@@ -478,8 +483,8 @@ class MeshRouter:
         for rep in reps:
             try:
                 fut = rep.ref.request("stats")
-            except Exception:
-                continue  # dead conn: the monitor path handles it
+            except Exception:  # lint: dead conn; the monitor path sweeps it
+                continue
             fut.add_done_callback(partial(self._on_stats, rep))
 
     def _on_stats(self, rep: _Replica, fut: Future) -> None:
@@ -542,18 +547,19 @@ class MeshRouter:
                 rep.state = "released"
             try:
                 rep.ref.exit(None)
-            except Exception:
+            except Exception:  # lint: replica already dead; exit is best-effort
                 pass
 
         try:
             rep.ref.request("drain").add_done_callback(on_drained)
-        except Exception:
-            pass  # the monitor path will sweep it
+        except Exception:  # lint: dead replica; the monitor path sweeps it
+            pass
 
     # -- observability / lifecycle -----------------------------------------
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             s: Dict[str, Any] = dict(self._counters)
+            s["last_scale_error"] = self._last_scale_error
             s["replicas"] = {
                 r.key: {"state": r.state, "peer": r.peer,
                         "inflight": len(r.inflight),
@@ -608,14 +614,14 @@ class MeshRouter:
         for rep in reps:
             try:
                 rep.ref.request("drain").result(timeout)
-            except Exception:
+            except Exception:  # lint: shutdown drain is best-effort
                 pass
             with self._lock:
                 if rep.state == "draining":
                     rep.state = "released"
             try:
                 rep.ref.exit(None)
-            except Exception:
+            except Exception:  # lint: replica may already be gone at shutdown
                 pass
 
     def __enter__(self) -> "MeshRouter":

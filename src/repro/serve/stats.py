@@ -8,8 +8,9 @@ unit the paper's sub-second-duty argument is made in.
 from __future__ import annotations
 
 import bisect
-import threading
 from typing import Dict, Optional
+
+from repro.analysis.runtime import make_lock
 
 __all__ = ["LatencyStats", "EWMA"]
 
@@ -30,7 +31,7 @@ class LatencyStats:
     """
 
     def __init__(self, maxlen: int = 100_000):
-        self._lock = threading.Lock()
+        self._lock = make_lock("LatencyStats")
         self._samples: list[float] = []    # arrival order (drives eviction)
         self._ordered: list[float] = []    # same samples, kept sorted
         self._sum = 0.0                    # running sum of the reservoir
@@ -91,7 +92,7 @@ class EWMA:
             raise ValueError("alpha must be in (0, 1]")
         self.alpha = alpha
         self._value: Optional[float] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("EWMA")
 
     def update(self, x: float) -> float:
         with self._lock:

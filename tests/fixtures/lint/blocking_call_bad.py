@@ -1,0 +1,27 @@
+"""Failing fixture for blocking-call-in-behavior (never imported)."""
+import threading
+import time
+
+
+def worker(msg):
+    time.sleep(0.1)            # blocking: behavior passed to spawn below
+    return msg
+
+
+def start(system):
+    return system.spawn(worker)
+
+
+def make_poller(ref):
+    def poll(tag):
+        return ref.ask(tag)    # blocking: synchronous ask in a behavior
+    return poll
+
+
+class Service:
+    def _run(self):
+        fut = self.submit()
+        fut.result()           # blocking: join inside a Thread target
+
+    def go(self):
+        threading.Thread(target=self._run).start()

@@ -1,0 +1,36 @@
+"""Passing fixture for blocking-call-in-behavior (never imported)."""
+import threading
+import time
+
+_pause = threading.Event()
+
+
+def worker(msg):
+    _pause.wait(0.1)           # event wait: interruptible, compliant
+    return msg
+
+
+def start(system):
+    return system.spawn(worker)
+
+
+def make_poller(ref):
+    def poll(tag):
+        fut = ref.request(tag)
+        fut.add_done_callback(lambda f: None)
+        return fut
+    return poll
+
+
+def helper_outside_behavior():
+    time.sleep(0.01)           # not a behavior: nothing spawns/targets this
+    return True
+
+
+class Service:
+    def _run(self):
+        time.sleep(0.1)  # lint: simulated device latency, test-only service
+        return None
+
+    def go(self):
+        threading.Thread(target=self._run).start()

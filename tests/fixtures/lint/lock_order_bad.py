@@ -1,0 +1,35 @@
+"""Failing fixture for the static lock-order rule (never imported)."""
+from repro.analysis.runtime import make_lock
+
+
+class Crossed:
+    """Two methods nest the same pair of locks in opposite orders — the
+    classic deadlock seed the rule must report as a cycle."""
+
+    def __init__(self):
+        self._la = make_lock("FixtureA")
+        self._lb = make_lock("FixtureB")
+
+    def one(self):
+        with self._la:
+            with self._lb:
+                return 1
+
+    def two(self):
+        with self._lb:
+            with self._la:
+                return 2
+
+
+class Inverted:
+    """Nests two ORDER.md-ranked locks inside-out: PagePool (rank 9)
+    acquired while holding RefRegistry (rank 18)."""
+
+    def __init__(self):
+        self._reg = make_lock("RefRegistry")
+        self._pool = make_lock("PagePool")
+
+    def bad(self):
+        with self._reg:
+            with self._pool:
+                return 0

@@ -1,0 +1,23 @@
+"""Passing fixture for the static lock-order rule (never imported)."""
+import threading
+
+from repro.analysis.runtime import make_lock, make_rlock
+
+
+class WellOrdered:
+    """Pool before registry, consistently — matches ORDER.md and never
+    nests the pair in the opposite order."""
+
+    def __init__(self):
+        self._pool = make_rlock("PagePool")
+        self._reg = make_lock("RefRegistry")
+        self._cv = threading.Condition(self._pool)
+
+    def allocate(self):
+        with self._pool:
+            with self._reg:
+                return 1
+
+    def account(self):
+        with self._reg:
+            return 2

@@ -1,0 +1,35 @@
+"""Failing fixture for the ref-lifecycle rule (never imported)."""
+import pickle
+
+from repro.core import DeviceRef
+
+
+def use_after_donate(arr, kernel):
+    ref = DeviceRef(arr)
+    ref.donate()
+    return ref.to_value()      # use-after-donate
+
+
+def double_release(arr):
+    ref = DeviceRef(arr)
+    ref.release()
+    ref.release()              # use-after-release (double release)
+
+
+def pickle_no_spill(arr):
+    ref = DeviceRef(arr)
+    blob = pickle.dumps(ref)   # pickle-without-spill
+    ref.release()
+    return blob
+
+
+def dropped(arr):
+    ref = DeviceRef(arr)       # unreleased-ref: bound, never mentioned again
+    return None
+
+
+def ask_emit_ref(system, kernel, x):
+    w = system.spawn(kernel, emit="ref")
+    r = w.ask(x)
+    r.release()
+    return r.shape             # use-after-release on an emit="ref" result

@@ -1,0 +1,37 @@
+"""Passing fixture for the ref-lifecycle rule (never imported)."""
+import pickle
+
+from repro.core import DeviceRef
+
+
+def release_after_use(arr):
+    ref = DeviceRef(arr)
+    val = ref.to_value()
+    ref.release()
+    return val
+
+
+def spill_then_pickle(arr):
+    ref = DeviceRef(arr)
+    ref.spill()
+    blob = pickle.dumps(ref)
+    ref.release()
+    return blob
+
+
+def escapes_to_caller(arr):
+    ref = DeviceRef(arr)
+    return ref                 # ownership transferred out
+
+
+def stored_for_later(arr, cache):
+    ref = DeviceRef(arr)
+    cache.append(ref)          # ownership transferred to the cache
+
+
+def emit_ref_released(system, kernel, x):
+    w = system.spawn(kernel, emit="ref")
+    r = w.ask(x)
+    val = r.to_value()
+    r.release()
+    return val

@@ -1,0 +1,16 @@
+"""Failing fixture for the silent-except rule (never imported)."""
+
+
+def poll(sock):
+    try:
+        return sock.recv(1)
+    except Exception:
+        pass
+
+
+def drain(items):
+    for it in items:
+        try:
+            it.close()
+        except:  # noqa: E722
+            continue
