@@ -25,6 +25,12 @@ def order_path() -> str:
 
 
 def _parse(path: str) -> List[str]:
+    # A missing ORDER.md (e.g. an install that dropped package data)
+    # degrades to an empty ranking — every lock is unranked, the rank
+    # check is a no-op, and the package stays importable. A present but
+    # unparseable ORDER.md is a config error and still raises.
+    if not os.path.exists(path):
+        return []
     names: List[str] = []
     with open(path, "r", encoding="utf-8") as fh:
         for line in fh:

@@ -232,13 +232,23 @@ class TrackedLock:
             with _graph.lock:
                 _graph.same_name.setdefault(a, _site())
             return
-        ra, rb = rank_of(a), rank_of(b)
-        if ra is not None and rb is not None and rb < ra:
-            raise _violation(
-                f"canonical lock-order violation: acquiring {b!r} "
-                f"(rank {rb}) while holding {a!r} (rank {ra}) at "
-                f"{_site()} — ORDER.md says {b!r} is an outer lock and "
-                f"must be taken first")
+        rb = rank_of(b)
+        if rb is not None:
+            # Compare against the innermost rank across *all* held locks,
+            # not just the top of stack — an unranked lock in between must
+            # not mask an inversion (ranked -> unranked -> outer ranked).
+            worst_name: Optional[str] = None
+            worst_rank: Optional[int] = None
+            for held_entry in stack:
+                r = rank_of(held_entry[0].name)
+                if r is not None and (worst_rank is None or r > worst_rank):
+                    worst_name, worst_rank = held_entry[0].name, r
+            if worst_rank is not None and rb < worst_rank:
+                raise _violation(
+                    f"canonical lock-order violation: acquiring {b!r} "
+                    f"(rank {rb}) while holding {worst_name!r} "
+                    f"(rank {worst_rank}) at {_site()} — ORDER.md says "
+                    f"{b!r} is an outer lock and must be taken first")
         if blocking:
             path = _graph.would_cycle(a, b)
             if path is not None:
@@ -247,7 +257,10 @@ class TrackedLock:
                     f"{a!r} at {_site()}, but the reverse order "
                     f"{' -> '.join(path)} -> {a!r} was already observed "
                     "— two threads interleaving these paths deadlock")
-        _graph.add_edge(a, b, _site())
+            # Non-blocking probes record their edge only on *success*
+            # (see acquire()): a failed try-lock never blocks, so it must
+            # not seed phantom edges that later read as cycles.
+            _graph.add_edge(a, b, _site())
 
     def _on_acquired(self) -> None:
         stack = _held_stack()

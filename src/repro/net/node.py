@@ -360,10 +360,12 @@ class NodeRuntime:
 
     def _note_error(self, where: str, exc: BaseException) -> None:
         """Record an exception a service loop survived. deque.append is
-        atomic, so no lock: callers are reader/accept threads that must
-        never block on runtime state."""
+        atomic so it stays lock-free, but the counter is a
+        read-modify-write and is bumped under the runtime lock (cheap —
+        error paths only, and no caller holds another lock here)."""
         self._swallowed.append((where, repr(exc)))
-        self.stats["errors_swallowed"] += 1
+        with self._lock:
+            self.stats["errors_swallowed"] += 1
 
     def swallowed_errors(self) -> list:
         """The last few survived exceptions, newest last."""

@@ -183,6 +183,37 @@ def test_tracked_lock_canonical_rank_fires(clean_lock_graph):
             pass
 
 
+def test_tracked_lock_failed_try_lock_leaves_no_edge(clean_lock_graph):
+    """A non-blocking acquire that loses the race must not seed a
+    phantom edge — try-lock fallback patterns would otherwise surface
+    as false cycles."""
+    a, b = rt.TrackedLock("ProbeA"), rt.TrackedLock("ProbeB")
+    b._inner.acquire()                 # make b contended
+    try:
+        with a:
+            assert not b.acquire(blocking=False)
+    finally:
+        b._inner.release()
+    assert rt.lock_order_graph() == {}
+    # a *successful* non-blocking acquire still records the edge
+    with a:
+        assert b.acquire(blocking=False)
+        b.release()
+    assert "ProbeB" in rt.lock_order_graph().get("ProbeA", {})
+
+
+def test_tracked_lock_rank_check_sees_past_unranked(clean_lock_graph):
+    """An unranked lock on top of the stack must not mask an inversion
+    against a ranked lock held beneath it."""
+    inner = rt.TrackedLock("RefRegistry")       # innermost rank
+    mid = rt.TrackedLock("UnrankedMiddle")
+    outer = rt.TrackedLock("PagePool")          # outer rank
+    with inner:
+        with mid:
+            with pytest.raises(rt.LockOrderViolation, match="canonical"):
+                outer.acquire()
+
+
 def test_tracked_lock_self_deadlock_fires(clean_lock_graph):
     l = rt.TrackedLock("SelfL")
     with l:
