@@ -1,0 +1,1 @@
+"""Compatibility fallbacks for optional third-party dependencies."""

@@ -1,0 +1,155 @@
+"""Minimal, API-compatible subset of `hypothesis` for environments where
+the real library is unavailable (this container bakes in the JAX/Pallas
+toolchain but no extras; nothing may be pip-installed at test time).
+
+Covers exactly what ``tests/test_property.py`` uses — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and
+``strategies.{integers,floats,lists}`` — as a deterministic random search
+(seeded per test) with no shrinking. The root ``conftest.py`` installs
+this module under the ``hypothesis`` name **only when** the real package
+cannot be imported; with hypothesis installed this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, Optional
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(); the example is skipped, not failed."""
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class HealthCheck:  # placeholder namespace for suppress_health_check=...
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self) -> Any:
+        return self._draw(random.Random())
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda r: fn(self._draw(r)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(r: random.Random):
+            for _ in range(1000):
+                v = self._draw(r)
+                if pred(v):
+                    return v
+            raise _Unsatisfied
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: bool(r.getrandbits(1)))
+
+
+def sampled_from(options) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(lambda r: r.choice(options))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> SearchStrategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elements._draw(r) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(s._draw(r) for s in strats))
+
+
+class settings:
+    """Decorator recording run parameters for ``given`` to pick up."""
+
+    def __init__(self, max_examples: int = 100,
+                 deadline: Optional[float] = None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._mh_settings = self
+        return fn
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Deterministic random search over the declared strategies.
+
+    Each example draws from a generator seeded by (test name, example
+    index), so failures reproduce run-to-run without a database.
+    """
+    if pos_strategies:
+        raise NotImplementedError(
+            "minihypothesis supports keyword strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(fn, "_mh_settings", None)
+            n = cfg.max_examples if cfg is not None else 100
+            ran = 0
+            attempt = 0
+            while ran < n and attempt < 20 * n:
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}"
+                                    f":{attempt}")
+                attempt += 1
+                drawn = {}
+                try:
+                    drawn = {k: s._draw(rng)
+                             for k, s in kw_strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (attempt {attempt - 1}): "
+                        f"{drawn}") from exc
+                ran += 1
+            return None
+
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not see the strategy-filled parameters as fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return decorate
+
+
+# `from hypothesis import strategies as st` needs a module-like attribute
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+              "tuples"):
+    setattr(strategies, _name, globals()[_name])
+strategies.SearchStrategy = SearchStrategy

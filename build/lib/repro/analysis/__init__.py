@@ -1,0 +1,26 @@
+"""Static and dynamic analysis for the actor runtime.
+
+* ``repro.analysis.lint`` + ``repro.analysis.rules`` — the AST linter
+  (``python -m repro.analysis [paths] --baseline analysis-baseline.txt``).
+* ``repro.analysis.runtime`` — ``TrackedLock``/``TrackedRLock`` and the
+  ``make_lock``/``make_rlock`` seam (activated by ``REPRO_ANALYSIS=1``),
+  plus the DeviceRef leak-sentinel helper used by the pytest plugin.
+* ``repro.analysis.order`` / ``ORDER.md`` — the canonical cross-module
+  lock hierarchy both halves enforce.
+
+This package must stay importable without jax: the runtime modules
+import the lock seam at import time, and the CLI lints source trees
+that may not be runnable in the linting environment.
+"""
+from .order import CANONICAL_LOCK_ORDER, LOCK_RANKS, order_path, rank_of
+from .runtime import (LockOrderViolation, TrackedLock, TrackedRLock,
+                      analysis_enabled, lock_order_cycles,
+                      lock_order_graph, make_lock, make_rlock,
+                      recorded_violations, reset_lock_graph)
+
+__all__ = [
+    "CANONICAL_LOCK_ORDER", "LOCK_RANKS", "order_path", "rank_of",
+    "LockOrderViolation", "TrackedLock", "TrackedRLock",
+    "analysis_enabled", "lock_order_cycles", "lock_order_graph",
+    "make_lock", "make_rlock", "recorded_violations", "reset_lock_graph",
+]

@@ -1,0 +1,254 @@
+"""``actor_facade`` — wrap a data-parallel kernel as an actor (paper §3.2).
+
+Whenever the facade receives a message it (paper's three-part behavior,
+§3.6):
+
+1. runs the **pre-processing** function (default: pattern-match the payload
+   against all ``In``/``InOut`` declarations and move host data to the
+   device),
+2. dispatches the **kernel** — a jit-compiled JAX/Pallas callable bound to
+   this actor's device. JAX dispatch is asynchronous: the returned arrays
+   are futures for device buffers, reproducing the paper's
+   ``clEnqueueNDRangeKernel`` + event pipeline (Listing 4) — downstream
+   actors can be messaged *before* the kernel finishes,
+3. runs the **post-processing** function (default: wrap each
+   ``Out``/``InOut`` result as a value — explicit host read-back — or as a
+   :class:`~repro.core.memref.DeviceRef` when the spec asked for reference
+   semantics).
+
+``InOut`` arguments are donated to XLA so the update happens in place,
+matching OpenCL's read-write buffer semantics; the incoming ``DeviceRef``
+(if any) is **donated** (``DeviceRef.donate()``), making buffer ownership
+transfer explicit — using the ref afterwards raises.
+
+DeviceRefs are the native currency on both sides of the behavior: incoming
+refs are unwrapped (with access-rights checks — an ``in`` argument needs
+read rights, ``in_out`` needs read+write), outgoing arrays are wrapped as
+refs whenever the spec asks for reference semantics *or* the actor was
+spawned with ``emit="ref"`` (how ``Pipeline`` keeps intermediate stages
+device-resident). The facade itself never calls ``to_value()``; the only
+host read-back is the explicit value-semantics path, counted in the
+registry as a ``readback``.
+"""
+from __future__ import annotations
+
+import inspect
+import warnings
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .actor import Actor
+from .errors import AccessViolation, SignatureMismatch
+from .manager import Device, Program
+from .memref import DeviceRef, as_device_array, registry
+from .signature import In, InOut, KernelSignature, Local, NDRange, Out
+
+__all__ = ["KernelActor", "detect_fn_kwargs", "eval_output_structs"]
+
+#: static keywords a kernel callable may accept from the runtime
+_KERNEL_KWARGS = ("nd_range", "out_shapes", "local_shapes")
+
+
+def detect_fn_kwargs(fn: Callable) -> set:
+    """Which of the runtime-supplied static keywords ``fn`` accepts — the
+    single source of truth shared by :class:`KernelActor` and
+    :meth:`~repro.core.api.KernelDecl.out_structs`."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins
+        return set()
+    return {k for k in _KERNEL_KWARGS if k in params}
+
+
+def eval_output_structs(fn: Callable, signature: KernelSignature,
+                        nd_range: Optional[NDRange], fn_kwargs,
+                        input_structs: Sequence) -> Tuple:
+    """Abstract-evaluate a kernel: the output ``jax.ShapeDtypeStruct``\\ s
+    for the given input structs, without running the kernel.
+
+    This is how ``repro.core.graph`` derives *typed ports* from a
+    :class:`KernelSignature` at build time (paper §3.5: composition over
+    statically checkable typed actor interfaces): the kernel's traceable
+    callable is bound to its static keywords (``nd_range`` /
+    ``local_shapes``), then ``jax.eval_shape``'d.
+    """
+    static_kwargs = {}
+    if "nd_range" in fn_kwargs:
+        static_kwargs["nd_range"] = nd_range
+    if "local_shapes" in fn_kwargs:
+        static_kwargs["local_shapes"] = tuple(
+            s.resolved_shape() for s in signature.local_specs)
+
+    def wrapped(*inputs):
+        out = fn(*inputs, **static_kwargs)
+        return out if isinstance(out, tuple) else (out,)
+
+    return tuple(jax.eval_shape(wrapped, *input_structs))
+
+
+class KernelActor(Actor):
+    """The paper's ``actor_facade`` adapted to JAX (DESIGN.md §2)."""
+
+    def __init__(self, fn: Callable, name: str, nd_range: Optional[NDRange],
+                 specs: Sequence, device: Device,
+                 program: Optional[Program] = None,
+                 preprocess: Optional[Callable] = None,
+                 postprocess: Optional[Callable] = None,
+                 donate: bool = True, emit: str = "declared",
+                 fused_from: Sequence[str] = ()):
+        super().__init__()
+        if emit not in ("declared", "ref"):
+            raise ValueError(f"emit must be 'declared' or 'ref', got {emit!r}")
+        self.fn = fn
+        #: node paths of the graph region this actor was fused from
+        #: (empty for ordinary single-kernel actors) — introspection for
+        #: the Graph fusion pass
+        self.fused_from = tuple(fused_from)
+        self.kernel_name = name
+        self.nd_range = nd_range
+        self.signature = KernelSignature(*specs)
+        self.device = device
+        self.program = program
+        self.preprocess = preprocess
+        self.postprocess = postprocess
+        self.donate = donate
+        #: "declared" honours each Out spec's as_ref; "ref" forces every
+        #: output to stay device-resident (intermediate pipeline stages)
+        self.emit = emit
+        self._jitted = None
+        # Kernels may want the index space / local sizes / resolved output
+        # shapes; detect which keywords the callable accepts once.
+        self._fn_kwargs = detect_fn_kwargs(fn)
+
+    # -- compilation ------------------------------------------------------
+    def _build(self):
+        sig = self.signature
+        fn = self.fn
+        static_kwargs = {}
+        if "nd_range" in self._fn_kwargs:
+            static_kwargs["nd_range"] = self.nd_range
+        if "local_shapes" in self._fn_kwargs:
+            static_kwargs["local_shapes"] = tuple(
+                s.resolved_shape() for s in sig.local_specs)
+
+        def wrapped(*inputs):
+            out = fn(*inputs, **static_kwargs)
+            return out if isinstance(out, tuple) else (out,)
+
+        donate = sig.donate_argnums if self.donate else ()
+        jitted = jax.jit(wrapped, donate_argnums=donate)
+
+        def build():
+            return jitted
+        key = ("jit", self.kernel_name, bool(donate))
+        if self.program is not None:
+            return self.program.compiled(key, build)
+        return jitted
+
+    def on_start(self):
+        if self._jitted is None:
+            self._jitted = self._build()
+
+    # -- behavior ------------------------------------------------------
+    def receive(self, *payload: Any) -> Any:
+        if self.preprocess is not None:
+            converted = self.preprocess(*payload)
+            if converted is None:  # pattern did not match → drop (paper §2.1)
+                return None
+            payload = converted if isinstance(converted, tuple) else (converted,)
+
+        sig = self.signature
+        inputs = sig.match_inputs(payload)
+        dev = self.device.jax_device
+        arrays = []
+        consumed_refs = []
+        for spec, value in zip(sig.input_specs, inputs):
+            if isinstance(value, DeviceRef):
+                if not value.readable:
+                    raise AccessViolation(
+                        f"kernel {self.kernel_name!r}: {spec.direction!r} "
+                        f"argument requires read rights, ref grants "
+                        f"{value.access!r}")
+                if spec.direction == "in_out":
+                    if not value.writable:
+                        raise AccessViolation(
+                            f"kernel {self.kernel_name!r}: 'in_out' argument "
+                            f"requires write rights, ref grants "
+                            f"{value.access!r}")
+                    if self.donate:
+                        consumed_refs.append(value)
+                arr = value.array
+            else:
+                # Untyped Python scalars/lists adopt the spec dtype; arrays
+                # keep theirs so mismatches are caught (pattern matching).
+                cast = None if hasattr(value, "dtype") else spec.np_dtype
+                arr = as_device_array(value, device=dev, dtype=cast)
+            if not spec.matches(arr.dtype):
+                raise SignatureMismatch(
+                    f"kernel {self.kernel_name!r}: argument dtype {arr.dtype} "
+                    f"does not match spec {spec.np_dtype}")
+            arrays.append(arr)
+
+        if self._jitted is None:
+            self.on_start()
+        self.device._dispatch_started()
+        try:
+            with warnings.catch_warnings():
+                # CPU backends may decline donation; that is fine.
+                warnings.simplefilter("ignore")
+                outputs = self._jitted(*arrays)
+        finally:
+            self.device._dispatch_finished()
+
+        # donated buffers: ownership moved into the kernel (donate-after-use
+        # on the incoming ref now raises)
+        for ref in consumed_refs:
+            ref.donate()
+
+        if len(outputs) != len(sig.output_specs):
+            raise SignatureMismatch(
+                f"kernel {self.kernel_name!r} returned {len(outputs)} outputs, "
+                f"signature declares {len(sig.output_specs)}")
+        response = []
+        for spec, arr in zip(sig.output_specs, outputs):
+            if not spec.matches(arr.dtype):
+                raise SignatureMismatch(
+                    f"kernel {self.kernel_name!r}: output dtype {arr.dtype} "
+                    f"does not match spec {spec.np_dtype}")
+            if spec.as_ref or self.emit == "ref":
+                response.append(DeviceRef(arr))      # stays device-resident
+            else:
+                registry.count_readback()            # explicit host read-back
+                response.append(np.asarray(jax.device_get(arr)))
+        result = tuple(response)
+        if self.postprocess is not None:
+            result = self.postprocess(*result)
+            if result is not None and not isinstance(result, tuple):
+                result = (result,)
+        if result is None:
+            return None
+        return result[0] if len(result) == 1 else result
+
+    def out_structs(self, input_structs: Sequence) -> Tuple:
+        """Abstract output types for ``input_structs`` (graph port typing)."""
+        return eval_output_structs(self.fn, self.signature, self.nd_range,
+                                   self._fn_kwargs, input_structs)
+
+    def clone(self, emit: Optional[str] = None) -> "KernelActor":
+        """A fresh (unspawned) actor sharing this one's declaration.
+
+        ``Pipeline._build_staged`` uses this to derive ref-emitting
+        intermediate stages from existing actors without mutating them."""
+        return KernelActor(fn=self.fn, name=self.kernel_name,
+                           nd_range=self.nd_range,
+                           specs=self.signature.specs, device=self.device,
+                           program=self.program, preprocess=self.preprocess,
+                           postprocess=self.postprocess, donate=self.donate,
+                           emit=emit or self.emit,
+                           fused_from=self.fused_from)
+
+    def on_exit(self, reason):
+        self._jitted = None

@@ -1,0 +1,613 @@
+"""Device-resident memory references — the paper's ``mem_ref<T>`` (§3.5).
+
+A :class:`DeviceRef` represents data living on an accelerator device. It is
+the *currency* of the runtime: kernel actors accept and emit refs natively,
+pipeline stages forward them so intermediate results never round-trip
+through host memory, and pools/schedulers route work toward the device a
+ref already lives on.
+
+JAX adaptation (DESIGN.md §2): a dispatched computation returns a
+``jax.Array`` immediately — the array *is* the completion event. Wrapping
+it in a ``DeviceRef`` and forwarding it to the next stage therefore
+reproduces the paper's OpenCL-event chaining (Listing 4) with zero extra
+machinery: stage *n+1* may enqueue against the ref before stage *n* has
+finished executing on the device; XLA's runtime resolves the dependency.
+
+Like the paper's reference type, a ``DeviceRef`` carries element type,
+length, and **access rights** ("r", "w", "rw") which are enforced: reading
+a write-only ref or donating a read-only ref raises
+:class:`~repro.core.errors.AccessViolation`. For distribution the paper
+offers two options — (a) prohibit serialization, (b) serialize through an
+explicit host copy. We implement both: a device-resident ref refuses to
+pickle, while :meth:`DeviceRef.spill` moves the payload to host memory at
+an explicit boundary, after which the ref pickles and can be
+:meth:`~DeviceRef.unspill`\\ ed on the receiving side.
+
+Every ref is accounted in the process-wide :class:`RefRegistry`: per-device
+live bytes (with a high watermark feeding placement policies) plus the
+host-transfer counters the zero-copy tests assert on.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..analysis.runtime import make_rlock
+from .errors import AccessViolation
+
+__all__ = [
+    "DeviceRef",
+    "RefRegistry",
+    "registry",
+    "as_device_array",
+    "live_ref_count",
+    "transfer_count",
+    "reset_transfer_stats",
+    "memory_stats",
+    "payload_device",
+    "tree_wrap",
+    "tree_unwrap",
+    "tree_release",
+]
+
+_ACCESS_MODES = ("r", "w", "rw")
+
+
+def _device_of(arr) -> Optional[jax.Device]:
+    """The ``jax.Device`` holding ``arr`` (single-device arrays)."""
+    try:
+        devs = arr.devices()
+        if len(devs) == 1:
+            return next(iter(devs))
+    except Exception:  # pragma: no cover - tracers / older jax
+        pass  # lint: device probe; tracers and older jax lack .devices()
+    dev = getattr(arr, "device", None)
+    return dev if isinstance(dev, jax.Device) else None
+
+
+class RefRegistry:
+    """Process-wide accounting of live :class:`DeviceRef`\\ s.
+
+    Tracks the live-ref count (leak checks), per-device live bytes with a
+    high watermark (``DeviceManager`` exposes these to the pool's
+    least-loaded placement), and the device↔host traffic counters:
+
+    * ``transfers``  — explicit ``to_value()`` read-backs
+    * ``readbacks``  — kernel-actor value-semantics outputs
+    * ``spills`` / ``unspills`` — explicit serialization boundaries
+    """
+
+    def __init__(self):
+        # reentrant: DeviceRef.__del__ releases through the registry, so
+        # a GC pass triggered inside a locked registry method re-enters
+        # this lock on the same thread (see analysis/ORDER.md, rank 19)
+        self._lock = make_rlock("RefRegistry")
+        self._count = 0
+        self._bytes: Dict[Any, int] = {}
+        self._peak: Dict[Any, int] = {}
+        self._pool_refs: list = []      # weakrefs to live PagePools
+        self.transfers = 0
+        self.readbacks = 0
+        self.spills = 0
+        self.unspills = 0
+
+    # -- ref lifecycle (called by DeviceRef) ---------------------------------
+    def on_create(self, device, nbytes: int, resident: bool) -> None:
+        with self._lock:
+            self._count += 1
+            if resident:
+                self._add_bytes(device, nbytes)
+
+    def on_resident(self, device, nbytes: int) -> None:
+        with self._lock:
+            self._add_bytes(device, nbytes)
+
+    def on_evict(self, device, nbytes: int) -> None:
+        with self._lock:
+            self._bytes[device] = self._bytes.get(device, 0) - nbytes
+
+    def on_retire(self, device, nbytes: int, resident: bool) -> None:
+        with self._lock:
+            self._count -= 1
+            if resident:
+                self._bytes[device] = self._bytes.get(device, 0) - nbytes
+
+    def _add_bytes(self, device, nbytes: int) -> None:
+        b = self._bytes.get(device, 0) + nbytes
+        self._bytes[device] = b
+        if b > self._peak.get(device, 0):
+            self._peak[device] = b
+
+    # -- traffic counters -----------------------------------------------------
+    def count_transfer(self) -> None:
+        with self._lock:
+            self.transfers += 1
+
+    def count_readback(self) -> None:
+        with self._lock:
+            self.readbacks += 1
+
+    def count_spill(self) -> None:
+        with self._lock:
+            self.spills += 1
+
+    def count_unspill(self) -> None:
+        with self._lock:
+            self.unspills += 1
+
+    # -- page pools (repro.serve.kvpool) --------------------------------
+    def register_pool(self, pool) -> None:
+        """Track a page pool (weakly) so page pressure is reported next
+        to the byte watermarks in :func:`memory_stats`."""
+        with self._lock:
+            self._pool_refs.append(weakref.ref(pool))
+            self._pool_refs = [r for r in self._pool_refs
+                               if r() is not None]
+
+    def _live_pools(self, device=None) -> list:
+        with self._lock:
+            pools = [r() for r in self._pool_refs]
+        pools = [p for p in pools if p is not None]
+        if device is None:
+            return pools
+        out = []
+        for p in pools:
+            pdev = getattr(p, "device", None)
+            pdev = getattr(pdev, "jax_device", pdev)  # unwrap manager.Device
+            if pdev is None:
+                # a device-less pool places its refs on the JAX default
+                # device; attribute its pressure there
+                pdev = jax.devices()[0]
+            if pdev == device:
+                out.append(p)
+        return out
+
+    def page_stats(self, device=None) -> dict:
+        """Aggregated page-pool pressure (optionally one device's):
+        capacity, live/free/shared pages, peak, and the internal
+        fragmentation ratio (unused slots inside allocated pages)."""
+        agg = {"pages_total": 0, "pages_live": 0, "pages_free": 0,
+               "pages_shared": 0, "peak_pages": 0}
+        used = slots = 0
+        for pool in self._live_pools(device):
+            s = pool.stats()          # pool lock only; never ours
+            for k in agg:
+                agg[k] += s[k]
+            used += s["used_slots"]
+            slots += s["page_slots"]
+        agg["fragmentation"] = (1.0 - used / slots) if slots else 0.0
+        return agg
+
+    # -- queries ------------------------------------------------------
+    def live_count(self) -> int:
+        return self._count
+
+    def live_bytes(self, device=None) -> int:
+        with self._lock:
+            if device is None:
+                return sum(self._bytes.values())
+            return self._bytes.get(device, 0)
+
+    def peak_bytes(self, device=None) -> int:
+        with self._lock:
+            if device is None:
+                return sum(self._peak.values())
+            return self._peak.get(device, 0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            base = {
+                "live_refs": self._count,
+                "live_bytes": sum(self._bytes.values()),
+                "peak_bytes": sum(self._peak.values()),
+                "transfers": self.transfers,
+                "readbacks": self.readbacks,
+                "spills": self.spills,
+                "unspills": self.unspills,
+            }
+        pages = self.page_stats()       # own locking (pool locks)
+        base["pages_total"] = pages["pages_total"]
+        base["pages_free"] = pages["pages_free"]
+        base["pages_shared"] = pages["pages_shared"]
+        base["fragmentation"] = pages["fragmentation"]
+        return base
+
+    def reset_traffic(self) -> None:
+        """Zero the host-traffic counters (not the live accounting)."""
+        with self._lock:
+            self.transfers = 0
+            self.readbacks = 0
+            self.spills = 0
+            self.unspills = 0
+
+
+#: the process-wide registry every DeviceRef reports to
+registry = RefRegistry()
+
+
+def live_ref_count() -> int:
+    """Number of un-released DeviceRefs (used by tests/leak checks)."""
+    return registry.live_count()
+
+
+def transfer_count() -> int:
+    """Explicit ``DeviceRef.to_value()`` device→host copies so far."""
+    return registry.transfers
+
+
+def reset_transfer_stats() -> None:
+    """Zero the host-traffic counters (transfers/readbacks/spills)."""
+    registry.reset_traffic()
+
+
+def memory_stats() -> dict:
+    """Registry snapshot: live refs/bytes, watermark, traffic counters."""
+    return registry.stats()
+
+
+def payload_device(payload) -> Optional[jax.Device]:
+    """The device the first :class:`DeviceRef` in ``payload`` lives on, or
+    ``None`` — the placement hint pools and schedulers route by."""
+    for v in payload:
+        if isinstance(v, DeviceRef) and v.device is not None and not v.is_spilled:
+            return v.device
+    return None
+
+
+class DeviceRef:
+    """A typed handle to device-resident data (``mem_ref<T>``).
+
+    Attributes mirror the paper's description: "a reference type includes
+    type information about the data it references in addition to the amount
+    of bytes it refers to and memory access rights."
+
+    Lifecycle states: ``live`` (device-resident) → ``spilled`` (host copy,
+    device buffer dropped; picklable) ↔ ``live``; terminal states are
+    ``donated`` (buffer ownership transferred into a kernel) and
+    ``released``.
+    """
+
+    __slots__ = ("_array", "_host", "dtype", "shape", "access", "device",
+                 "_state", "__weakref__")
+
+    def __init__(self, array: jax.Array, access: str = "rw"):
+        if access not in _ACCESS_MODES:
+            raise ValueError("access must be 'r', 'w' or 'rw'")
+        self._array = array
+        self._host = None
+        self.dtype = array.dtype
+        self.shape = tuple(array.shape)
+        self.access = access
+        self.device = _device_of(array)
+        self._state = "live"
+        registry.on_create(self.device, self.nbytes, resident=True)
+
+    @classmethod
+    def put(cls, value, device=None, dtype=None, access: str = "rw") -> "DeviceRef":
+        """Transfer a host value to ``device`` and wrap it (the paper's
+        first-actor-in-the-chain input transfer, made explicit)."""
+        arr = jax.device_put(np.asarray(value, dtype=dtype), device)
+        return cls(arr, access=access)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * np.prod(self.shape, dtype=np.int64))
+
+    @property
+    def readable(self) -> bool:
+        return "r" in self.access
+
+    @property
+    def writable(self) -> bool:
+        return "w" in self.access
+
+    @property
+    def is_spilled(self) -> bool:
+        return self._state == "spilled"
+
+    def _check_usable(self) -> None:
+        if self._state == "released":
+            raise RuntimeError("DeviceRef used after release")
+        if self._state == "donated":
+            raise RuntimeError(
+                "DeviceRef used after donation: the buffer was donated to a "
+                "kernel and its ownership transferred (donate-after-use)")
+
+    @property
+    def array(self) -> jax.Array:
+        """The underlying (possibly still-executing) device array."""
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError(
+                "DeviceRef is spilled to host memory; call unspill() first")
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; reading "
+                "requires 'r'")
+        return self._array
+
+    @property
+    def sharding(self):
+        return self.array.sharding
+
+    def is_ready(self) -> bool:
+        """True once the producing computation has completed on device."""
+        if self._state != "live":
+            return True
+        try:
+            return bool(self._array.is_ready())
+        except AttributeError:  # pragma: no cover - older jax
+            return True
+
+    # -- access rights ------------------------------------------------------
+    def restrict(self, access: str) -> "DeviceRef":
+        """A narrowed-rights view of the same device buffer (paper §3.5).
+
+        Rights may only shrink (``rw`` → ``r``); widening raises
+        :class:`AccessViolation`. The view is an independent ref — release
+        it like any other (accounting counts its bytes separately).
+        """
+        if access not in _ACCESS_MODES:
+            raise ValueError("access must be 'r', 'w' or 'rw'")
+        if not set(access) <= set(self.access):
+            raise AccessViolation(
+                f"cannot widen access rights {self.access!r} -> {access!r}")
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError("cannot derive a view of a spilled DeviceRef")
+        return DeviceRef(self._array, access=access)
+
+    # -- data movement ------------------------------------------------------
+    def to_value(self) -> np.ndarray:
+        """Explicit device→host copy (the paper's read-back at pipeline end).
+
+        Counted in :func:`transfer_count` — the zero-copy pipeline tests
+        assert this stays flat across stage hops.
+        """
+        self._check_usable()
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; to_value() "
+                "requires 'r'")
+        if self._state == "spilled":
+            return np.array(self._host)
+        registry.count_transfer()
+        return np.asarray(jax.device_get(self._array))
+
+    def block_until_ready(self) -> "DeviceRef":
+        self.array.block_until_ready()
+        return self
+
+    # -- spill / unspill (paper §3.5 distribution option (b)) ----------------
+    def spill(self) -> "DeviceRef":
+        """Serialize to host memory and drop the device buffer.
+
+        This is the *explicit* stage boundary for distribution: a spilled
+        ref pickles (see ``__reduce__``) and stops counting against the
+        device's live bytes. Inverse of :meth:`unspill`. Requires read
+        rights — spilling serializes the contents, so a write-only view
+        must not be able to exfiltrate data its rights forbid reading.
+        """
+        self._check_usable()
+        if self._state == "spilled":
+            return self
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; spill() "
+                "serializes the contents and requires 'r'")
+        self._host = np.asarray(jax.device_get(self._array))
+        self._array = None
+        self._state = "spilled"
+        registry.count_spill()
+        registry.on_evict(self.device, self.nbytes)
+        return self
+
+    def spill_copy(self) -> "DeviceRef":
+        """A spilled **clone** for the wire: serializes the contents into a
+        new picklable host-side ref, leaving this ref device-resident.
+
+        This is the request-payload wire boundary (``repro.net``): the
+        sender keeps its live ref so an exactly-once retry (a chunk
+        re-issued after the receiving *node* died) can replay the same
+        payload locally. Replies use in-place :meth:`spill` instead —
+        there the ref's ownership transfers to the remote caller. Counts
+        one spill either way, so "one spill/unspill pair per wire hop"
+        holds for both directions. Requires read rights, like
+        :meth:`spill`.
+        """
+        self._check_usable()
+        if not self.readable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; spill_copy() "
+                "serializes the contents and requires 'r'")
+        if self._state == "spilled":
+            host = np.array(self._host)
+        else:
+            host = np.asarray(jax.device_get(self._array))
+        registry.count_spill()
+        return _rebuild_spilled(host, np.dtype(self.dtype).str, self.shape,
+                                self.access)
+
+    def unspill(self, device=None) -> "DeviceRef":
+        """Move a spilled payload back onto ``device`` (default: where it
+        lived before, or the process default device). Accepts a bare
+        ``jax.Device`` or the runtime's ``Device`` wrapper — the receiving
+        node of a wire transfer passes whichever it routes by."""
+        if self._state != "spilled":
+            self._check_usable()
+            return self
+        device = getattr(device, "jax_device", device)
+        self._array = jax.device_put(self._host, device or self.device)
+        self._host = None
+        self.device = _device_of(self._array)
+        self._state = "live"
+        registry.count_unspill()
+        registry.on_resident(self.device, self.nbytes)
+        return self
+
+    # -- consumption ------------------------------------------------------
+    def donate(self) -> jax.Array:
+        """Consume the ref for buffer donation: returns the array and marks
+        the ref dead so XLA may reuse the buffer in place (the TPU analogue
+        of handing a read-write ``cl_mem`` to a kernel). Requires write
+        rights; any later use raises a donate-after-use error."""
+        self._check_usable()
+        if self._state == "spilled":
+            raise RuntimeError(
+                "cannot donate a spilled DeviceRef; unspill() first")
+        if not self.writable:
+            raise AccessViolation(
+                f"DeviceRef has access rights {self.access!r}; donation "
+                "requires 'w'")
+        arr = self._array
+        self._array = None
+        self._state = "donated"
+        registry.on_retire(self.device, self.nbytes, resident=True)
+        return arr
+
+    def release(self) -> None:
+        """Drop the buffer (paper: "dropping a reference argument simply
+        releases its memory on the device"). Idempotent."""
+        if self._state in ("released", "donated"):
+            return
+        resident = self._state == "live"
+        registry.on_retire(self.device, self.nbytes, resident=resident)
+        self._array = None
+        self._host = None
+        self._state = "released"
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        try:
+            self.release()
+        except Exception:
+            pass  # lint: finalizers must never raise
+
+    # -- distribution policy -------------------------------------------------
+    def __reduce__(self):
+        # Paper §3.5: option (a) — a device-resident ref refuses to
+        # serialize, so sending one over the network raises instead of
+        # silently copying; option (b) — after an *explicit* spill() the
+        # host payload travels and unspill() restores device residency on
+        # the receiving node.
+        if self._state == "spilled":
+            return (_rebuild_spilled,
+                    (self._host, np.dtype(self.dtype).str, self.shape,
+                     self.access))
+        raise TypeError(
+            "DeviceRef is bound to local device memory and cannot be "
+            "serialized; call .spill() for explicit host serialization or "
+            ".to_value() for an explicit host copy")
+
+    def __repr__(self):
+        """Diagnostic form: dtype/shape, access rights, lifecycle state,
+        byte size, and where the payload lives — enough to read a
+        graph-edge error without a debugger. Examples::
+
+            DeviceRef<float32>[16][rw, live/ready, 64B @ TFRT_CPU_0]
+            DeviceRef<float32>[16][r, spilled, 64B @ host]
+            DeviceRef<float32>[16][rw, released]
+        """
+        head = f"DeviceRef<{np.dtype(self.dtype).name}>{list(self.shape)}"
+        if self._state == "live":
+            phase = "ready" if self.is_ready() else "pending"
+            loc = str(self.device) if self.device is not None else "?"
+            return f"{head}[{self.access}, live/{phase}, {self.nbytes}B @ {loc}]"
+        if self._state == "spilled":
+            return f"{head}[{self.access}, spilled, {self.nbytes}B @ host]"
+        return f"{head}[{self.access}, {self._state}]"
+
+
+def _rebuild_spilled(host, dtype_str, shape, access) -> DeviceRef:
+    """Unpickle target: reconstruct a spilled ref (host payload only)."""
+    ref = DeviceRef.__new__(DeviceRef)
+    ref._array = None
+    ref._host = np.asarray(host)
+    ref.dtype = np.dtype(dtype_str)
+    ref.shape = tuple(shape)
+    ref.access = access
+    ref.device = None
+    ref._state = "spilled"
+    registry.on_create(None, ref.nbytes, resident=False)
+    return ref
+
+
+# ----------------------------------------------------------------------------
+# pytree helpers — per-request cache refs (serve engine)
+# ----------------------------------------------------------------------------
+def tree_wrap(tree, device=None, access: str = "rw", created=None):
+    """Wrap every array leaf of a pytree as a :class:`DeviceRef`.
+
+    This is how the serve engine represents per-request decode state: a
+    model cache pytree becomes a pytree of refs, each leaf accounted in the
+    registry and kept device-resident between decode steps. Leaves that are
+    already refs pass through unchanged; host values are transferred to
+    ``device`` first.
+
+    ``created`` (a list, optional) collects every ref this call creates
+    *as it is created* — callers that must release on a mid-tree wrapping
+    failure (one bad leaf after several good ones) release the partial
+    set instead of leaking it; the serve engine's shed path depends on
+    this.
+    """
+
+    # accept the runtime's Device wrapper as well as a bare jax.Device
+    device = getattr(device, "jax_device", device)
+
+    def wrap(leaf):
+        if isinstance(leaf, DeviceRef):
+            return leaf
+        ref = DeviceRef(as_device_array(leaf, device=device), access=access)
+        if created is not None:
+            created.append(ref)
+        return ref
+
+    return jax.tree.map(wrap, tree)
+
+
+def tree_unwrap(tree):
+    """The inverse view: every :class:`DeviceRef` leaf replaced by its
+    (possibly still-executing) device array; non-ref leaves pass through."""
+    return jax.tree.map(
+        lambda l: l.array if isinstance(l, DeviceRef) else l, tree,
+        is_leaf=lambda l: isinstance(l, DeviceRef))
+
+
+def tree_release(tree) -> int:
+    """Release every ref leaf in ``tree`` (idempotent); returns how many
+    refs/pages were visited — the serve engine drops a request's whole
+    cache with one call when the request leaves the batch.
+
+    Besides bare :class:`DeviceRef` leaves this also recognizes objects
+    exposing ``release_pages()`` (a ``repro.serve.kvpool.PageTable``), so
+    the ChunkScheduler's duplicate-success path reclaims a speculative
+    race loser's *paged* cache the same way it reclaims loose refs.
+    """
+    n = 0
+    is_leaf = lambda l: isinstance(l, DeviceRef) or hasattr(l, "release_pages")
+    for leaf in jax.tree.leaves(tree, is_leaf=is_leaf):
+        if isinstance(leaf, DeviceRef):
+            leaf.release()
+            n += 1
+        elif hasattr(leaf, "release_pages"):
+            n += leaf.release_pages()
+    return n
+
+
+def as_device_array(value, device=None, dtype=None) -> jax.Array:
+    """Normalize message payloads (host arrays, scalars, or DeviceRefs) to a
+    device array, transferring host data if needed (paper: the first actor in
+    a chain transfers input data to the device)."""
+    if isinstance(value, DeviceRef):
+        arr = value.array
+    else:
+        arr = value
+    if not isinstance(arr, jax.Array):
+        arr = np.asarray(arr, dtype=dtype)
+        arr = jax.device_put(arr, device)
+    elif device is not None and getattr(arr, "sharding", None) is not None:
+        arr = jax.device_put(arr, device)
+    return arr

@@ -1,0 +1,25 @@
+"""Distribution layer: sharding rules, train/serve steps, collectives,
+fault tolerance, and pipeline parallelism — all built on the unified
+kernel-actor surface in ``repro.core`` (paper §3.5/§3.6 scaled up).
+
+Modules:
+
+* :mod:`repro.dist.api`         — sharding-hint context managers used by the
+                                  model code (``hint``/``hint_vocab``/
+                                  ``hint_named``).
+* :mod:`repro.dist.sharding`    — the divisibility-aware sharding rule
+                                  engine (params, optimizer state, batches,
+                                  KV caches) for GSPMD meshes.
+* :mod:`repro.dist.step`        — train/serve step builders (grad accum,
+                                  LR schedules, greedy decode).
+* :mod:`repro.dist.collectives` — int8-compressed all-reduce with error
+                                  feedback.
+* :mod:`repro.dist.fault`       — supervised checkpoint/restart training
+                                  and elastic data parallelism, built on
+                                  the actor monitor/link substrate.
+* :mod:`repro.dist.pipeline`    — pipeline parallelism from stage actors,
+                                  a consumer of :class:`repro.core.Pipeline`.
+"""
+from . import api, collectives, fault, pipeline, sharding, step
+
+__all__ = ["api", "collectives", "fault", "pipeline", "sharding", "step"]

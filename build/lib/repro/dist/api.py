@@ -1,0 +1,87 @@
+"""Sharding-hint API: the model code calls ``hint``/``hint_vocab``/
+``hint_named`` unconditionally; outside a distribution context they are
+identity functions, inside one (``dryrun_lib`` lowering a pod-scale cell)
+they pin intermediate activations with ``with_sharding_constraint``.
+
+This indirection keeps the model pure: layers never import mesh or
+``NamedSharding`` types, the launcher decides placement (DESIGN.md §6).
+Contexts are thread-local so concurrent actor-driven lowerings do not
+leak constraints into each other.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+__all__ = [
+    "activation_sharding", "vocab_sharding", "spec_map",
+    "hint", "hint_vocab", "hint_named",
+]
+
+_state = threading.local()
+
+
+def _get(name: str):
+    return getattr(_state, name, None)
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding):
+    """Pin the residual stream ([B, S, D]) to ``sharding`` within scope."""
+    prev = _get("act")
+    _state.act = sharding
+    try:
+        yield
+    finally:
+        _state.act = prev
+
+
+@contextlib.contextmanager
+def vocab_sharding(sharding):
+    """Pin vocab-dim tensors ([B, S, V]) to ``sharding`` within scope."""
+    prev = _get("vocab")
+    _state.vocab = sharding
+    try:
+        yield
+    finally:
+        _state.vocab = prev
+
+
+@contextlib.contextmanager
+def spec_map(mapping: Optional[Dict[str, Any]]):
+    """Named-site constraints (Megatron-style TP output pins). ``mapping``
+    maps hint-site names (``attn_q``, ``attn_kv``, ``mlp_hidden``) to
+    shardings; ``None`` disables all named hints."""
+    prev = _get("specmap")
+    _state.specmap = mapping
+    try:
+        yield
+    finally:
+        _state.specmap = prev
+
+
+def _constrain(x, sharding):
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def hint(x):
+    """Constrain a residual-stream activation (no-op outside a context)."""
+    return _constrain(x, _get("act"))
+
+
+def hint_vocab(x):
+    """Constrain a vocab-dim tensor (no-op outside a context)."""
+    return _constrain(x, _get("vocab"))
+
+
+def hint_named(x, name: str):
+    """Constrain a named hint site, if the active spec map pins it."""
+    mapping = _get("specmap")
+    if not mapping:
+        return x
+    return _constrain(x, mapping.get(name))

@@ -1,0 +1,254 @@
+"""Divisibility-aware sharding rule engine (DESIGN.md §6).
+
+Maps parameter / optimizer / batch / KV-cache pytrees onto a GSPMD mesh
+with ``data`` (+ optional ``pod``) and ``model`` axes. Rules are keyed by
+the leaf's path name (param trees are transparent dicts — see
+``models/layers.py``), and every rule is guarded by divisibility: a
+dimension that does not divide the axis size falls back to replication
+instead of failing to lower (e.g. mamba2's 3352-wide ``in_proj`` shards
+on an 8-way mesh but replicates on a 16-way one).
+
+Conventions:
+
+* column-parallel weights (``wq``/``wk``/``wv``/``w_up``/``w_gate``/
+  ``in_proj`` …) shard their output (last) dim on ``model``;
+* row-parallel weights (``wo``/``w_out``/``out_proj``) shard their
+  contraction dim (second-to-last) on ``model`` — the Megatron pairing
+  that keeps one all-reduce per block;
+* the embedding table shards its vocab rows, the LM head its vocab
+  columns (both padded to the mesh via ``cfg.padded_vocab``);
+* everything else (norm scales, biases, routers, positional tables)
+  replicates;
+* ``Plan(fsdp=True)`` additionally shards the largest remaining big dim
+  over the data axes (ZeRO-3-equivalent since optimizer state mirrors
+  parameter shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+__all__ = [
+    "MODEL_AXIS", "Plan", "data_axes",
+    "param_shardings", "opt_state_shardings",
+    "batch_shardings", "cache_shardings",
+]
+
+MODEL_AXIS = "model"
+
+#: weights whose output (last) dim is model-sharded (column-parallel)
+_COL_PARALLEL = {"wq", "wk", "wv", "bq", "bk", "bv",
+                 "w_up", "w_gate", "in_proj", "w_x", "w_y"}
+#: weights whose contraction (second-to-last) dim is model-sharded
+_ROW_PARALLEL = {"wo", "w_out", "out_proj"}
+#: lookup tables that must never shard their index dim
+_REPLICATED = {"pos_embed", "router"}
+
+#: smallest dim FSDP will split over the data axes — below this the
+#: per-shard tile is not worth the gather traffic
+_FSDP_MIN_DIM = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Distribution knobs consumed by the rule engine."""
+
+    fsdp: bool = False          # ZeRO param+opt sharding over the data axes
+    kv_cache: str = "heads"     # decode KV layout: "heads" | "seq"
+
+
+# ----------------------------------------------------------------------------
+# mesh helpers
+# ----------------------------------------------------------------------------
+def data_axes(mesh) -> Tuple[str, ...]:
+    """All non-model axes (``('data',)`` or ``('pod', 'data')``)."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _model_size(mesh) -> int:
+    return _axis_sizes(mesh).get(MODEL_AXIS, 1)
+
+
+def _data_size(mesh) -> int:
+    sizes = _axis_sizes(mesh)
+    return int(np.prod([sizes[a] for a in data_axes(mesh)])) if data_axes(mesh) else 1
+
+
+def _dp_axes(mesh):
+    """The data axes as a single PartitionSpec entry."""
+    axes = data_axes(mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _dp_spec(mesh, n: Optional[int]):
+    """PartitionSpec entry for a batch-like dim of size ``n``: the data
+    axes when ``n`` divides their product, else ``None`` (replicate)."""
+    if n is None:
+        return None
+    return _dp_axes(mesh) if n % _data_size(mesh) == 0 else None
+
+
+def _path_name(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, FlattenedIndexKey):
+            parts.append(str(k.key))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# ----------------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------------
+def _param_spec(name: str, shape: Tuple[int, ...], msize: int
+                ) -> Tuple[Tuple, str]:
+    """→ (per-dim spec entries, human-readable rule tag)."""
+    leaf = name.rsplit("/", 1)[-1]
+    nd = len(shape)
+    spec = [None] * nd
+
+    def divisible(i: int) -> bool:
+        return shape[i] % msize == 0
+
+    if leaf in _REPLICATED:
+        return tuple(spec), "replicate(table)"
+    if leaf == "embed" and nd == 2:
+        if divisible(0):
+            spec[0] = MODEL_AXIS
+            return tuple(spec), "vocab-rows"
+        return tuple(spec), "replicate(vocab%model!=0)"
+    if leaf == "head" and nd >= 2:
+        if divisible(nd - 1):
+            spec[nd - 1] = MODEL_AXIS
+            return tuple(spec), "vocab-cols"
+        return tuple(spec), "replicate(vocab%model!=0)"
+    if leaf in _COL_PARALLEL and nd >= 1:
+        if divisible(nd - 1):
+            spec[nd - 1] = MODEL_AXIS
+            return tuple(spec), "column-parallel"
+        return tuple(spec), f"replicate({shape[nd - 1]}%{msize}!=0)"
+    if leaf in _ROW_PARALLEL and nd >= 2:
+        if divisible(nd - 2):
+            spec[nd - 2] = MODEL_AXIS
+            return tuple(spec), "row-parallel"
+        return tuple(spec), f"replicate({shape[nd - 2]}%{msize}!=0)"
+    return tuple(spec), "replicate"
+
+
+def _apply_fsdp(spec: Tuple, shape: Tuple[int, ...], mesh) -> Tuple:
+    """Add the data axes on the largest unsharded big dim (if divisible)."""
+    dsize = _data_size(mesh)
+    if dsize <= 1:
+        return spec
+    cands = [i for i in range(len(shape))
+             if spec[i] is None and shape[i] % dsize == 0
+             and shape[i] >= _FSDP_MIN_DIM]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: (shape[i], i))
+    out = list(spec)
+    out[best] = _dp_axes(mesh)
+    return tuple(out)
+
+
+def param_shardings(shapes, cfg, mesh, plan: Optional[Plan] = None, *,
+                    explain: Optional[Dict[str, Tuple[str, P]]] = None):
+    """Parameter pytree (of arrays or ShapeDtypeStructs) → NamedShardings.
+
+    ``explain``, when given, is filled with ``path → (rule, PartitionSpec)``
+    so tests and the dry-run report can audit every placement decision.
+    """
+    plan = plan or Plan()
+    msize = _model_size(mesh)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in leaves:
+        name = _path_name(path)
+        spec, rule = _param_spec(name, tuple(leaf.shape), msize)
+        if plan.fsdp:
+            fsdp_spec = _apply_fsdp(spec, tuple(leaf.shape), mesh)
+            if fsdp_spec != spec:
+                spec, rule = fsdp_spec, rule + "+fsdp"
+        pspec = P(*spec)
+        if explain is not None:
+            explain[name] = (rule, pspec)
+        out.append(NamedSharding(mesh, pspec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(param_sh, mesh):
+    """AdamW state shardings: first/second moments mirror the parameter
+    shardings exactly (ZeRO-equivalent partitioning for free), the step
+    counter replicates."""
+    return {"m": param_sh, "v": param_sh,
+            "count": NamedSharding(mesh, P())}
+
+
+# ----------------------------------------------------------------------------
+# batches
+# ----------------------------------------------------------------------------
+def batch_shardings(batch_specs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    """Input batches shard their leading (batch) dim over the data axes;
+    a non-divisible batch (e.g. the B=1 long-context shape) replicates.
+    ``positions`` is [3, B, S] — its batch dim is second."""
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions":
+            out[k] = NamedSharding(
+                mesh, P(None, _dp_spec(mesh, v.shape[1]), None))
+        else:
+            rest = (None,) * (len(v.shape) - 1)
+            out[k] = NamedSharding(mesh, P(_dp_spec(mesh, v.shape[0]), *rest))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# KV / recurrent caches
+# ----------------------------------------------------------------------------
+def cache_shardings(cache_shapes, cfg, mesh, plan: Optional[Plan] = None):
+    """Decode-cache shardings. KV leaves ([layers, B, S, Hkv, hd]) shard
+    batch on data and, per ``plan.kv_cache``, either the sequence dim
+    ("seq" — flash-decode split-K layout) or the kv-head dim ("heads") on
+    model; recurrent/conv state shards batch only. Divisibility fallbacks
+    apply per-dim as for parameters."""
+    plan = plan or Plan()
+    msize = _model_size(mesh)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in leaves:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        name = _path_name(path).rsplit("/", 1)[-1]
+        if nd == 0:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = _dp_spec(mesh, shape[1])  # batch dim
+        if name in ("k", "v") and nd == 5:
+            if plan.kv_cache == "seq":
+                if shape[2] % msize == 0:
+                    spec[2] = MODEL_AXIS
+            elif shape[3] % msize == 0:
+                spec[3] = MODEL_AXIS
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,111 @@
+"""Train / serve step builders.
+
+``build_train_step`` closes over the model and optimizer config and
+returns a pure ``(state, batch) → (state, metrics)`` function suitable
+for ``jax.jit`` (callers add ``in_shardings``/``donate_argnums``).
+Gradient accumulation runs as a ``lax.scan`` over microbatches so the
+HLO stays O(1) in the accumulation factor; ``presplit=True`` accepts a
+batch already shaped ``[A, B/A, ...]`` (the dry-run path, where the
+splitter runs on the host to keep the per-device working set bounded).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+__all__ = ["init_train_state", "build_train_step", "build_serve_step"]
+
+
+def init_train_state(model, key, ocfg) -> Dict[str, Any]:
+    """→ ``{"params", "opt", "step"}`` — the canonical train-state pytree."""
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": adamw.init(params, ocfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_microbatches(batch: Dict[str, Any], accum: int) -> Dict[str, Any]:
+    """``[B, ...] → [A, B/A, ...]``; ``positions`` [3,B,S] → [A,3,B/A,S]."""
+    out = {}
+    for k, v in batch.items():
+        v = jnp.asarray(v)
+        if k == "positions":
+            three, b, s = v.shape
+            out[k] = jnp.moveaxis(v.reshape(three, accum, b // accum, s), 1, 0)
+        else:
+            b = v.shape[0]
+            out[k] = v.reshape((accum, b // accum) + v.shape[1:])
+    return out
+
+
+def build_train_step(model, ocfg, *, grad_accum: int = 1,
+                     lr_schedule: Optional[Callable] = None,
+                     accum_dtype: str = "float32",
+                     presplit: bool = False,
+                     grad_shardings=None) -> Callable:
+    """One optimizer step: loss + grad (accumulated over ``grad_accum``
+    microbatches), global-norm clip, AdamW update.
+
+    ``grad_shardings`` (a pytree of NamedShardings matching the params)
+    pins the accumulated gradients so GSPMD keeps the accumulation loop
+    collective-free until the optimizer."""
+    adt = jnp.dtype(accum_dtype)
+
+    def loss_fn(params, mb):
+        loss, parts = model.loss(params, mb)
+        return loss, parts
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+
+        if grad_accum <= 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            loss = loss.astype(jnp.float32)
+        else:
+            mbs = batch if presplit else _split_microbatches(batch, grad_accum)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                (l, parts), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt) / grad_accum, g_acc, g)
+                return (loss_acc + l.astype(jnp.float32) / grad_accum,
+                        g_acc), parts
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (loss, grads), parts_stack = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            parts = jax.tree.map(lambda x: jnp.mean(x, axis=0), parts_stack)
+
+        if grad_shardings is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, grad_shardings)
+
+        lr_scale = lr_schedule(step) if lr_schedule is not None else 1.0
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, opt, params, ocfg, lr_scale)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_serve_step(model) -> Callable:
+    """One greedy decode step: ``(params, cache, tokens[B,1]) →
+    (next[B,1] int32, logits[B,1,V], cache)``."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step

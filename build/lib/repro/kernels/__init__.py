@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's hot spots + jit'd wrappers + oracles.
+
+Layout per assignment: ``<name>.py`` holds the ``pl.pallas_call`` +
+``BlockSpec`` kernel, ``ops.py`` the public jit'd wrappers, ``ref.py`` the
+pure-jnp oracles.
+"""
+from . import ops, ref
+from .ops import (flash_attention, mandelbrot, matmul, radix_sort,
+                  stream_compact, wah_interleave)
+
+__all__ = ["ops", "ref", "flash_attention", "mandelbrot", "matmul",
+           "radix_sort", "stream_compact", "wah_interleave"]

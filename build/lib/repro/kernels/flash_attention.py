@@ -1,0 +1,126 @@
+"""Online-softmax (flash) attention forward kernel for TPU.
+
+The LM-training hot spot. Grid ``(B, H, Sq/bq, Skv/bk)`` — the KV axis is
+innermost so the (m, l, acc) running-softmax state lives in VMEM scratch
+carried across sequential grid steps (the TPU substitute for a GPU
+thread-block loop). GQA is handled in the KV index_map (``h // group``)
+so grouped KV heads are never materialized. Supports causal and local-
+window (RecurrentGemma) masking with right-aligned positions so
+``Skv > Sq`` (decode/chunked-prefill) works.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pallas_flash_attention"]
+
+_NEG = -1e30
+_LANES = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               bq: int, bk: int, kv_steps: int, scale: float,
+               causal: bool, window: Optional[int], pos_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Only blocks that can contain unmasked entries do work.
+    q_last = qi * bq + bq - 1 + pos_offset          # largest query position
+    k_first = ki * bk                               # smallest key position
+    needed = True
+    if causal:
+        needed = k_first <= q_last
+    if window is not None:
+        k_last = ki * bk + bk - 1
+        q_first = qi * bq + pos_offset
+        needed = jnp.logical_and(needed, k_last > q_first - window)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + \
+            (qi * bq + pos_offset)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + ki * bk
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > (qpos - window)
+        logits = jnp.where(mask, logits, _NEG)
+
+        m_prev = m_ref[:, :1]                        # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)                  # (bq, bk)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "scale", "interpret"))
+def pallas_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           bq: int = 128, bk: int = 128,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B,H,Sq,D]; k,v: [B,Hkv,Skv,D] with Hkv | H. Returns [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    kv_steps = skv // bk
+    scale_val = (d ** -0.5) if scale is None else scale
+    pos_offset = skv - sq  # right-aligned query positions
+
+    grid = (b, h, sq // bq, kv_steps)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, bq=bq, bk=bk, kv_steps=kv_steps,
+                          scale=scale_val, causal=causal, window=window,
+                          pos_offset=pos_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qq, kk: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qq, kk, g=group: (bb, hh // g, kk, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qq, kk, g=group: (bb, hh // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qq, kk: (bb, hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # m
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # l
+            pltpu.VMEM((bq, d), jnp.float32),        # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

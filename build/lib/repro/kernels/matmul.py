@@ -1,0 +1,63 @@
+"""MXU-tiled matrix multiply (paper §3.3 illustration kernel).
+
+The OpenCL kernel assigns one work-item per output element; the TPU
+adaptation assigns one *tile* per grid step so that every step performs a
+(bm × bk) · (bk × bn) MXU contraction from VMEM, with a float32 VMEM
+scratch accumulator carried across the K grid dimension (TPU grids execute
+sequentially, so the scratch is the carry — the role OpenCL work-group
+state played on the GPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pallas_matmul"]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pallas_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                  bk: int = 128, interpret: bool = False) -> jax.Array:
+    """``a @ b`` with explicit (bm, bn, bk) VMEM tiling.
+
+    Block sizes default to 128 — the MXU systolic dimension — and must
+    divide the operand shapes (pad at the call site otherwise).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

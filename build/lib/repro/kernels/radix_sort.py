@@ -1,0 +1,73 @@
+"""LSD radix sort digit pass (paper §4: "radix sort using a fixed
+cardinality of 16 bits") adapted to TPU.
+
+Per digit pass the GPU version builds per-work-group histograms and ranks
+with warp ballots. The TPU kernel computes, per block and entirely on the
+MXU/VPU:
+
+    onehot[src, bin] = (digit[src] == bin)            # (bs × nbins)
+    hist[bin]        = ones(1,bs) @ onehot            # digit histogram
+    before           = strict_lower_tri(bs) @ onehot  # prefix per bin
+    rank[src]        = Σ_bin before[src,bin] * onehot[src,bin]
+
+The wrapper (``ops.radix_sort``) turns (hist, rank) into global
+destination indices with two tiny cumsums and applies the permutation with
+one XLA scatter per pass — the irregular move again delegated to XLA,
+mirroring the compaction design (DESIGN.md §2).
+
+The Pallas path supports digit widths up to 8 bits (nbins ≤ 256 keeps the
+onehot in VMEM); the paper's 16-bit cardinality runs on the oracle path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pallas_radix_pass"]
+
+
+def _radix_pass_kernel(x_ref, hist_ref, rank_ref, *, bs: int, nbins: int,
+                       shift: int):
+    x = x_ref[...].astype(jnp.uint32)                          # (1, bs)
+    digit = ((x >> jnp.uint32(shift)) & jnp.uint32(nbins - 1)).astype(jnp.int32)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (bs, nbins), 1)
+    onehot = (digit.reshape(bs, 1) == bins).astype(jnp.float32)  # (bs, nbins)
+
+    ones_row = jnp.ones((1, bs), jnp.float32)
+    hist = jnp.dot(ones_row, onehot, preferred_element_type=jnp.float32)
+    hist_ref[...] = hist.astype(jnp.int32)                     # (1, nbins)
+
+    r = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+    tril = (c < r).astype(jnp.float32)                         # strictly lower
+    before = jnp.dot(tril, onehot, preferred_element_type=jnp.float32)
+    rank = jnp.sum(before * onehot, axis=1)                    # (bs,)
+    rank_ref[...] = rank.astype(jnp.int32).reshape(1, bs)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bits", "shift", "interpret"))
+def pallas_radix_pass(x: jax.Array, *, bs: int = 256, bits: int = 8,
+                      shift: int = 0, interpret: bool = False):
+    """One digit pass. Returns ``(hist[nb, nbins], rank[nb, bs])``."""
+    assert bits <= 8, "Pallas path supports ≤8-bit digits (VMEM onehot)"
+    (n,) = x.shape
+    assert n % bs == 0, (n, bs)
+    nb, nbins = n // bs, 1 << bits
+    xb = x.reshape(nb, bs)
+    return pl.pallas_call(
+        functools.partial(_radix_pass_kernel, bs=bs, nbins=nbins, shift=shift),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, bs), lambda b: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, nbins), lambda b: (b, 0)),
+            pl.BlockSpec((1, bs), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, nbins), jnp.int32),
+            jax.ShapeDtypeStruct((nb, bs), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xb)

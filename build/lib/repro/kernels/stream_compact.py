@@ -1,0 +1,73 @@
+"""Stream compaction (paper §4; Billeter et al. HPG'09) adapted to TPU.
+
+The GPU algorithm is a 3-phase compaction built on intra-warp shuffles:
+(1) per-work-group valid counts, (2) prefix over counts, (3) move.
+Warp shuffles have no TPU analogue (DESIGN.md §2), so the per-block local
+compaction is re-expressed as a **one-hot permutation matmul** on the MXU:
+
+    p        = cumsum(valid) - 1                 # destination within block
+    onehot   = (p[src] == dst) & valid[src]      # (bs × bs) 0/1 matrix
+    compact  = onehot @ values                   # exact in f32 via 16-bit split
+
+One Pallas pass emits, per block, the locally-compacted values and the
+valid count. The global move (Billeter's phase 3) is a single XLA gather
+assembled from the per-block counts in ``ops.stream_compact`` — irregular
+data movement is XLA's job on TPU; regular compute stays in the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pallas_local_compact"]
+
+
+def _local_compact_kernel(x_ref, out_ref, cnt_ref, *, bs: int, drop_value: int):
+    x = x_ref[...].astype(jnp.uint32)                       # (1, bs)
+    valid = x != jnp.uint32(drop_value)                     # (1, bs)
+    incl = jnp.cumsum(valid.astype(jnp.int32), axis=1)      # (1, bs)
+    p = incl - 1                                            # (1, bs) dest idx
+    cnt_ref[0, 0] = incl[0, bs - 1]
+
+    dst = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)  # row = destination
+    onehot = ((p == dst) & valid).astype(jnp.float32)       # (bs, bs)
+    lo = (x & jnp.uint32(0xFFFF)).astype(jnp.float32)       # (1, bs)
+    hi = (x >> jnp.uint32(16)).astype(jnp.float32)
+    comp_lo = jnp.dot(onehot, lo.reshape(bs, 1),
+                      preferred_element_type=jnp.float32)   # (bs, 1) exact
+    comp_hi = jnp.dot(onehot, hi.reshape(bs, 1),
+                      preferred_element_type=jnp.float32)
+    comp = (comp_hi.astype(jnp.uint32) << jnp.uint32(16)) | \
+        comp_lo.astype(jnp.uint32)
+    out_ref[...] = comp.reshape(1, bs)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "drop_value", "interpret"))
+def pallas_local_compact(x: jax.Array, *, bs: int = 256, drop_value: int = 0,
+                         interpret: bool = False):
+    """Per-block compaction. ``x`` is uint32 of length divisible by ``bs``.
+
+    Returns ``(blocks, counts)``: ``blocks[b, :counts[b]]`` are the
+    surviving elements of block ``b`` in order.
+    """
+    (n,) = x.shape
+    assert n % bs == 0, (n, bs)
+    nb = n // bs
+    xb = x.reshape(nb, bs)
+    return pl.pallas_call(
+        functools.partial(_local_compact_kernel, bs=bs, drop_value=drop_value),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, bs), lambda b: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, bs), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xb)

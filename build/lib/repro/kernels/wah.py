@@ -1,0 +1,45 @@
+"""WAH ``prepare_index`` kernel (paper §4, Listing 5; Fusco et al. IMC'13).
+
+``fuseFillsLiterals`` first interleaves the fill and literal arrays into a
+combined index array (``out[2i] = fills[i], out[2i+1] = literals[i]``)
+before stream-compacting the zero entries. The interleave is a pure
+layout transform — on TPU one VPU-tile-sized block of each input per grid
+step, written as an interleaved double-width block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pallas_wah_interleave"]
+
+
+def _interleave_kernel(f_ref, l_ref, o_ref, *, bs: int):
+    f = f_ref[...]                                   # (1, bs)
+    l = l_ref[...]                                   # (1, bs)
+    pair = jnp.stack([f[0], l[0]], axis=1)           # (bs, 2)
+    o_ref[...] = pair.reshape(1, 2 * bs)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def pallas_wah_interleave(fills: jax.Array, literals: jax.Array, *,
+                          bs: int = 512, interpret: bool = False) -> jax.Array:
+    (n,) = fills.shape
+    assert fills.shape == literals.shape
+    assert n % bs == 0, (n, bs)
+    nb = n // bs
+    out = pl.pallas_call(
+        functools.partial(_interleave_kernel, bs=bs),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda b: (b, 0)),
+            pl.BlockSpec((1, bs), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * bs), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 2 * bs), fills.dtype),
+        interpret=interpret,
+    )(fills.reshape(nb, bs), literals.reshape(nb, bs))
+    return out.reshape(2 * n)

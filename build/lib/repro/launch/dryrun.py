@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below runs with 512 placeholder devices -----------------------
+"""Multi-pod dry-run entrypoint (assignment MULTI-POD DRY-RUN).
+
+Lowers + compiles every (architecture × input shape) cell on the
+single-pod (16×16) and multi-pod (2×16×16) production meshes, prints
+``memory_analysis()`` / ``cost_analysis()``, and writes one JSON artifact
+per cell under ``experiments/dryrun/``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--arch", action="append", default=None,
+                        help="architecture id (repeatable); default: all")
+    parser.add_argument("--shape", action="append", default=None,
+                        help="input shape name (repeatable); default: all")
+    parser.add_argument("--all", action="store_true")
+    parser.add_argument("--single-pod-only", action="store_true",
+                        help="skip the 2-pod 512-chip mesh")
+    parser.add_argument("--out", default=None, help="artifact directory")
+    parser.add_argument("--plan", default=None,
+                        help="JSON dict of CellPlan overrides")
+    args = parser.parse_args(argv)
+
+    from repro import configs
+    from repro.launch import dryrun_lib
+
+    archs = args.arch or configs.list_archs()
+    shapes = args.shape or list(configs.SHAPES)
+    overrides = json.loads(args.plan) if args.plan else None
+
+    results = dryrun_lib.run_cells(
+        archs, shapes, multi_pod_check=not args.single_pod_only,
+        out_dir=args.out or dryrun_lib.ARTIFACT_DIR,
+        plan_overrides=overrides)
+
+    failed = {k: v for k, v in results.items() if v["status"] == "FAILED"}
+    ok = sum(1 for v in results.values() if v["status"] == "compiled")
+    skipped = sum(1 for v in results.values() if v["status"] == "skipped")
+    print(f"\n== dry-run: {ok} compiled, {skipped} skipped "
+          f"(documented), {len(failed)} failed ==")
+    for k, v in failed.items():
+        print(f"  FAILED {k}: {v['error'][:200]}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

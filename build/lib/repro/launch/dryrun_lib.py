@@ -1,0 +1,319 @@
+"""Dry-run cell lowering: (arch × input-shape × mesh) → compiled artifact
++ roofline terms. Importable without touching device state; the
+``dryrun.py`` entrypoint sets the 512-device XLA flag before importing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ModelConfig
+from repro.dist import api as dist_api
+from repro.dist import sharding as sh
+from repro.dist import step as step_mod
+from repro.models import Model, train_input_specs
+from repro.optim import AdamWConfig
+from repro.roofline import analysis as roof
+
+ARTIFACT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Per-cell distribution knobs (overridable — the §Perf lever set)."""
+
+    grad_accum: int = 1
+    accum_dtype: str = "float32"
+    opt_dtype: str = "float32"
+    kv_cache: str = "heads"          # decode KV layout: heads | seq
+    seq_activations: bool = False    # Megatron-SP residual stream
+    tp_hints: bool = False           # pin TP projection outputs (Megatron)
+    fsdp: bool = False               # ZeRO param+opt sharding over 'data'
+    attn_impl: str = "xla"           # xla | xla_chunked[:q_chunk]
+    remat: str = "full"
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+_ACT_BUDGET = 4.0e9   # rematted residual-stream bytes per device (train)
+_BIG_PARAMS = 90e9    # switch optimizer/accum state to bf16 above this
+
+
+def plan_for(cfg: ModelConfig, shape_name: str, mesh,
+             overrides: Optional[Dict[str, Any]] = None) -> CellPlan:
+    seq, global_batch, kind = configs.SHAPES[shape_name]
+    plan = CellPlan()
+    sizes = _mesh_axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dp = int(np.prod([sizes[a] for a in sh.data_axes(mesh)]))
+    plan.fsdp = cfg.param_count() >= 25e9
+    if kind == "train":
+        big = cfg.param_count() >= _BIG_PARAMS
+        plan.opt_dtype = "bfloat16" if big else "float32"
+        plan.accum_dtype = "bfloat16" if big else "float32"
+        plan.seq_activations = cfg.d_model >= 8192 and seq % msize == 0
+        shard_div = msize if plan.seq_activations else 1
+        layers = cfg.n_layers + (cfg.encdec.n_enc_layers or 0)
+        per_row = seq * cfg.d_model * 2 * max(layers, 1) / shard_div
+        rows_budget = max(int(_ACT_BUDGET // max(per_row, 1)), 1)
+        if plan.seq_activations:
+            # d≥8k giants: saved-stack copies in the scan-of-scan dominate
+            # the CPU-backend arena; one microbatch row/device bounds peak
+            rows_budget = 1
+        accum = 1
+        while accum < global_batch // dp and \
+                (global_batch // (accum * dp)) > rows_budget:
+            accum *= 2
+        plan.grad_accum = accum
+    elif kind == "prefill":
+        plan.attn_impl = "xla_chunked:512"
+    else:  # decode
+        plan.kv_cache = "seq"
+    for k, v in (overrides or {}).items():
+        setattr(plan, k, v)
+    return plan
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _model_for(cfg: ModelConfig, mesh, plan: CellPlan, seq: int) -> Model:
+    msize = _mesh_axis_sizes(mesh)["model"]
+    padded_vocab = cfg.padded_vocab(msize)
+    cfg = dataclasses.replace(cfg, remat=plan.remat)
+    return Model(cfg, vocab=padded_vocab, attn_impl=plan.attn_impl,
+                 max_dec_len=max(448, seq))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
+               plan_overrides: Optional[Dict[str, Any]] = None,
+               compile_cell: bool = True) -> Dict[str, Any]:
+    """Lower (+compile) one cell; returns the report dict (assignment §3)."""
+    cfg = configs.get_config(arch)
+    if not configs.shape_applicable(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §5)"}
+    seq, global_batch, kind = configs.SHAPES[shape_name]
+    plan = plan_for(cfg, shape_name, mesh, plan_overrides)
+    model = _model_for(cfg, mesh, plan, seq)
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.monotonic()
+
+    if kind == "train":
+        lowered = _lower_train(model, mesh, plan, seq, global_batch)
+    elif kind == "prefill":
+        lowered = _lower_prefill(model, mesh, plan, seq, global_batch)
+    else:
+        lowered = _lower_decode(model, mesh, plan, seq, global_batch)
+    t_lower = time.monotonic() - t0
+
+    report: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": kind, "chips": chips, "plan": plan.to_dict(),
+        "lower_s": round(t_lower, 2), "status": "lowered",
+    }
+    if not compile_cell:
+        return report
+
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    report["compile_s"] = round(time.monotonic() - t0, 2)
+    report["status"] = "compiled"
+    # assignment §3: print memory/cost analysis (proves it fits / §Roofline)
+    try:
+        print(f"-- {arch} {shape_name} {mesh_name} memory_analysis:",
+              compiled.memory_analysis(), flush=True)
+    except Exception:
+        pass
+
+    msize = _mesh_axis_sizes(mesh)["model"]
+    seq_dims = {seq, seq // msize, 512, 1024, 2048}
+    rl = roof.analyze(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips,
+        model_flops=roof.model_flops_for(cfg, shape_name, seq, global_batch,
+                                         kind),
+        step_kind=kind, seq_dims=seq_dims)
+    report["roofline"] = rl.to_dict()
+    return report
+
+
+def _tp_spec_map(cfg, mesh, dp):
+    """Megatron-style output constraints for the TP projections: heads /
+    hidden sharded on 'model' (when divisible), batch on the data axes."""
+    msize = _mesh_axis_sizes(mesh)["model"]
+    h_ok = cfg.n_heads and cfg.n_heads % msize == 0
+    kv_ok = cfg.n_kv_heads and cfg.n_kv_heads % msize == 0
+    ff_ok = cfg.d_ff and cfg.d_ff % msize == 0
+    return {
+        "attn_q": NamedSharding(mesh, P(
+            dp, None, sh.MODEL_AXIS if h_ok else None, None)),
+        "attn_kv": NamedSharding(mesh, P(
+            dp, None, sh.MODEL_AXIS if kv_ok else None, None)),
+        "mlp_hidden": NamedSharding(mesh, P(
+            dp, None, sh.MODEL_AXIS if ff_ok else None)),
+    }
+
+
+# ----------------------------------------------------------------------------
+def _train_state_shapes(model: Model, ocfg: AdamWConfig):
+    return jax.eval_shape(
+        lambda: step_mod.init_train_state(model, jax.random.key(0), ocfg))
+
+
+def _presplit_specs(batch_specs, accum: int):
+    """[B, ...] → [A, B/A, ...]; positions [3,B,S] → [A, 3, B/A, S]."""
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions":
+            _, b, s = v.shape
+            out[k] = jax.ShapeDtypeStruct((accum, 3, b // accum, s), v.dtype)
+        else:
+            b = v.shape[0]
+            out[k] = jax.ShapeDtypeStruct((accum, b // accum) + v.shape[1:],
+                                          v.dtype)
+    return out
+
+
+def _presplit_shardings(batch_specs, mesh):
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions":           # [A, 3, B/A, S]
+            out[k] = NamedSharding(mesh, P(None, None,
+                                           sh._dp_spec(mesh, v.shape[2]), None))
+        else:                           # [A, B/A, ...]
+            out[k] = NamedSharding(
+                mesh, P(None, sh._dp_spec(mesh, v.shape[1]),
+                        *([None] * (len(v.shape) - 2))))
+    return out
+
+
+def _lower_train(model: Model, mesh, plan: CellPlan, seq: int,
+                 global_batch: int):
+    cfg = model.cfg
+    ocfg = AdamWConfig(state_dtype=plan.opt_dtype)
+    state_shapes = _train_state_shapes(model, ocfg)
+    p_sh = sh.param_shardings(state_shapes["params"], cfg, mesh,
+                              sh.Plan(fsdp=plan.fsdp))
+    state_sh = {"params": p_sh, "opt": sh.opt_state_shardings(p_sh, mesh),
+                "step": NamedSharding(mesh, P())}
+    batch_specs = train_input_specs(cfg, global_batch, seq)
+    presplit = plan.grad_accum > 1
+    if presplit:
+        batch_specs = _presplit_specs(batch_specs, plan.grad_accum)
+        b_sh = _presplit_shardings(batch_specs, mesh)
+    else:
+        b_sh = sh.batch_shardings(batch_specs, mesh)
+
+    train_step = step_mod.build_train_step(
+        model, ocfg, grad_accum=plan.grad_accum, accum_dtype=plan.accum_dtype,
+        presplit=presplit, grad_shardings=p_sh)
+    jitted = jax.jit(train_step, in_shardings=(state_sh, b_sh),
+                     donate_argnums=(0,))
+
+    mb_rows = global_batch // max(plan.grad_accum, 1)
+    dp = sh._dp_spec(mesh, mb_rows)
+    act = NamedSharding(mesh, P(
+        dp, sh.MODEL_AXIS if plan.seq_activations else None, None))
+    vocab_sh = NamedSharding(mesh, P(dp, None, sh.MODEL_AXIS))
+    spec_map = _tp_spec_map(cfg, mesh, dp) if plan.tp_hints else None
+    with dist_api.activation_sharding(act if plan.seq_activations else None), \
+            dist_api.vocab_sharding(vocab_sh), \
+            dist_api.spec_map(spec_map):
+        return jitted.lower(state_shapes, batch_specs)
+
+
+def _lower_prefill(model: Model, mesh, plan: CellPlan, seq: int,
+                   global_batch: int):
+    cfg = model.cfg
+    param_shapes = model.param_shapes()
+    p_sh = sh.param_shardings(param_shapes, cfg, mesh,
+                              sh.Plan(fsdp=plan.fsdp))
+    batch_specs = train_input_specs(cfg, global_batch, seq)
+    batch_specs.pop("labels")
+    b_sh = sh.batch_shardings(batch_specs, mesh)
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1, :]  # last-position logits (serving prefill)
+
+    jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+    return jitted.lower(param_shapes, batch_specs)
+
+
+def _lower_decode(model: Model, mesh, plan: CellPlan, seq: int,
+                  global_batch: int):
+    cfg = model.cfg
+    param_shapes = model.param_shapes()
+    plan_obj = sh.Plan(kv_cache=plan.kv_cache, fsdp=plan.fsdp)
+    p_sh = sh.param_shardings(param_shapes, cfg, mesh, plan_obj)
+
+    if cfg.family == "encdec":
+        frames = jax.ShapeDtypeStruct(
+            (global_batch, cfg.encdec.n_frames, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+        cache_shapes = jax.eval_shape(
+            lambda p, f: model.init_cache(global_batch, seq, params=p,
+                                          frames=f),
+            param_shapes, frames)
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(global_batch, seq))
+    c_sh = sh.cache_shardings(cache_shapes, cfg, mesh, plan_obj)
+    tok = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    t_sh = NamedSharding(mesh, P(sh._dp_spec(mesh, global_batch), None))
+
+    serve_step = step_mod.build_serve_step(model)
+    jitted = jax.jit(serve_step, in_shardings=(p_sh, c_sh, t_sh),
+                     donate_argnums=(1,))
+    return jitted.lower(param_shapes, cache_shapes, tok)
+
+
+# ----------------------------------------------------------------------------
+def run_cells(arch_list, shape_list, *, multi_pod_check: bool = True,
+              out_dir: str = ARTIFACT_DIR,
+              plan_overrides: Optional[Dict] = None,
+              verbose: bool = True) -> Dict[str, Any]:
+    from repro.launch.mesh import make_production_mesh
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    mesh_single = make_production_mesh(multi_pod=False)
+    mesh_multi = make_production_mesh(multi_pod=True) if multi_pod_check else None
+    for arch in arch_list:
+        for shape in shape_list:
+            key = f"{arch}__{shape}"
+            for mesh, mname in ((mesh_single, "1pod-256"),
+                                *(((mesh_multi, "2pod-512"),)
+                                  if multi_pod_check else ())):
+                tag = f"{key}__{mname}"
+                try:
+                    rep = lower_cell(arch, shape, mesh, mname,
+                                     plan_overrides=plan_overrides)
+                except Exception as exc:  # noqa: BLE001 — report, keep going
+                    rep = {"arch": arch, "shape": shape, "mesh": mname,
+                           "status": "FAILED", "error": repr(exc)[:2000]}
+                results[tag] = rep
+                with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                    json.dump(rep, f, indent=1)
+                if verbose:
+                    rl = rep.get("roofline", {})
+                    print(f"[{rep['status']:9s}] {tag} "
+                          f"compile={rep.get('compile_s', '-')}s "
+                          f"bottleneck={rl.get('bottleneck', '-')} "
+                          f"err={rep.get('error', '')[:120]}", flush=True)
+    return results

@@ -1,0 +1,41 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN §1).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches JAX device state; callers (dryrun.py) set
+``--xla_force_host_platform_device_count`` before first JAX use.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)}; the "
+            "dry-run entrypoint must set xla_force_host_platform_device_count")
+    if devices[0].platform == "tpu":  # topology-aware order on real hardware
+        from jax.experimental import mesh_utils
+        devs = mesh_utils.create_device_mesh(shape, devices=devices[:n])
+    else:
+        devs = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary small meshes for tests (e.g. (2, 2) on 4 host devices)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention, MoE, SSM, RG-LRU, assemblies."""
+from .model import Model, serve_input_specs, train_input_specs
+
+__all__ = ["Model", "serve_input_specs", "train_input_specs"]

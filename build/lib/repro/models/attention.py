@@ -1,0 +1,240 @@
+"""Attention: GQA/MQA with qk-norm, QKV bias, (M-)RoPE, local windows,
+softcap; training path + single-token decode path with a KV cache.
+
+Training attention dispatches between the Pallas flash kernel (TPU) and
+the masked-einsum XLA path (CPU / dry-run). Decode attention is written
+so the KV cache can be sharded on heads *or* sequence — the split-K
+(flash-decode) variant used at pod scale lives in ``repro.dist.decode``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+from .layers import apply_m_rope, apply_norm, apply_rope, init_norm
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dtype) / math.sqrt(h * hd),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, "rmsnorm", dtype)
+        p["k_norm"] = init_norm(hd, "rmsnorm", dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array,
+                 positions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    if positions is not None:
+        if cfg.m_rope:
+            q = apply_m_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_m_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.dist import api as dist_api
+    q = dist_api.hint_named(q, "attn_q")
+    k = dist_api.hint_named(k, "attn_kv")
+    v = dist_api.hint_named(v, "attn_kv")
+    return q, k, v
+
+
+def _mha(q, k, v, *, causal: bool, window: Optional[int],
+         softcap: Optional[float], bias_mask: Optional[jax.Array],
+         impl: str) -> jax.Array:
+    """q: [B,S,H,D] → [B,S,H,D]; k/v: [B,S,Hkv,D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "pallas" and softcap is None and bias_mask is None:
+        out = ops.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                  impl="pallas")
+        return out.transpose(0, 2, 1, 3)
+    if impl.startswith("xla_chunked") and bias_mask is None \
+            and qt.shape[2] % min(
+                int(impl.rsplit(":", 1)[1]) if ":" in impl else 512,
+                qt.shape[2]) == 0:
+        q_chunk = int(impl.rsplit(":", 1)[1]) if ":" in impl else 512
+        out = _mha_chunked(qt, kt, vt, causal=causal, window=window,
+                           softcap=softcap, q_chunk=min(q_chunk, qt.shape[2]))
+        return out.transpose(0, 2, 1, 3)
+    # (non-divisible seq, e.g. whisper's 1500-frame encoder, falls through
+    # to the plain path — small enough to materialize)
+    # XLA path (dry-run / CPU / softcap / explicit masks). GQA is expressed
+    # by a grouped-head einsum — K/V are never repeated/materialized per
+    # query head (memory term + SPMD-friendliness).
+    b, h, sq, d = qt.shape
+    hkv, skv = kt.shape[1], kt.shape[2]
+    g = h // hkv
+    qg = qt.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bkgqd,bkKd->bkgqK", qg.astype(jnp.float32),
+                        kt.astype(jnp.float32)) * (d ** -0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > (qpos - window)
+    if bias_mask is not None:
+        mask = mask[None, None, None] & bias_mask[:, :, None]
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vt.dtype)
+    out = jnp.einsum("bkgqK,bkKd->bkgqd", probs, vt).reshape(b, h, sq, d)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _mha_chunked(qt, kt, vt, *, causal: bool, window: Optional[int],
+                 softcap: Optional[float], q_chunk: int) -> jax.Array:
+    """Sarathi-style chunked prefill: scan over query chunks so the score
+    tensor is [B,H,qc,Skv] instead of [B,H,Sq,Skv] — the XLA-path
+    equivalent of flash tiling, needed for 32k-prefill lowering."""
+    b, h, sq, d = qt.shape
+    hkv, skv = kt.shape[1], kt.shape[2]
+    g = h // hkv
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    nc = sq // q_chunk
+    qs = qt.reshape(b, hkv, g, nc, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kf = kt.astype(jnp.float32)
+    vf = vt
+
+    kpos = jnp.arange(skv)[None, :]
+
+    def body(_, inp):
+        qc, idx = inp                                  # [B,Hkv,G,qc,D]
+        logits = jnp.einsum("bkgqd,bkKd->bkgqK", qc.astype(jnp.float32),
+                            kf) * (d ** -0.5)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = jnp.arange(q_chunk)[:, None] + idx * q_chunk + (skv - sq)
+        mask = jnp.ones((q_chunk, skv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > (qpos - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(vf.dtype)
+        out = jnp.einsum("bkgqK,bkKd->bkgqd", probs, vf)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nc)))
+    # [nc,B,Hkv,G,qc,D] → [B,H,Sq,D]
+    return outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, d).astype(qt.dtype)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions, *,
+              causal: bool = True, window: Optional[int] = None,
+              impl: str = "xla", cross_kv: Optional[Tuple] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    ``cross_kv=(k, v)`` switches to cross-attention (whisper decoder):
+    K/V come from the encoder, no causal mask.
+    """
+    b, s, _ = x.shape
+    if cross_kv is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:
+        q, _, _ = _project_qkv(p, cfg, x, positions)
+        k, v = cross_kv
+        causal, window = False, None
+    out = _mha(q, k, v, causal=causal, window=window,
+               softcap=cfg.attn_logit_softcap, bias_mask=None, impl=impl)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def project_kv(p: dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Encoder-side K/V for cross attention (computed once per request)."""
+    b, s, _ = x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.attn_bias:
+        k = k + p["bk"].reshape(hkv, hd)
+        v = v + p["bv"].reshape(hkv, hd)
+    if cfg.qk_norm:
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    return k, v
+
+
+# ----------------------------------------------------------------------------
+# decode path — one new token against a KV cache
+# ----------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                  n_layers: int) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, hkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array, k_cache, v_cache,
+                     cache_len, positions, *, window: Optional[int] = None,
+                     write_pos=None):
+    """One-token attention. x: [B,1,D]; caches: [B,Smax,Hkv,Dh].
+
+    Returns (out [B,1,D], new_k_cache, new_v_cache). The new K/V row is
+    written at ``write_pos`` (default ``cache_len``; ring-buffer caches pass
+    ``cache_len % capacity``); ``cache_len`` always drives the validity
+    mask, saturated at the cache capacity.
+    """
+    b = x.shape[0]
+    if write_pos is None:
+        write_pos = cache_len
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, write_pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, write_pos, axis=1)
+
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // hkv
+    smax = k_cache.shape[1]
+    qg = q.reshape(b, hkv, g, hd)                                 # [B,Hkv,G,D]
+    kf = k_cache.astype(jnp.float32)                              # [B,S,Hkv,D]
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        kf) * (hd ** -0.5)
+    if cfg.attn_logit_softcap is not None:
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    kpos = jnp.arange(smax)[None, None, None, :]
+    # saturate: once a ring-buffer cache has wrapped, every slot is live
+    valid = kpos <= jnp.minimum(cache_len, smax - 1)
+    if window is not None:
+        valid &= kpos > (cache_len - window)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vf).astype(x.dtype)
+    out = out.reshape(b, 1, h * hd) @ p["wo"]
+    return out, k_cache, v_cache

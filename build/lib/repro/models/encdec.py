@@ -1,0 +1,172 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a **stub** per the assignment: ``input_specs``
+provides precomputed frame embeddings [B, n_frames, d_model]. Encoder =
+bidirectional self-attention blocks over frames with sinusoidal positions;
+decoder = causal self-attention + cross-attention with learned positions.
+Decode carries a self-attn KV cache plus per-layer cross K/V computed once
+at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn_mod
+from .layers import (apply_mlp, apply_norm, init_embedding, init_mlp,
+                     init_norm, sinusoidal_positions)
+
+Params = Dict[str, Any]
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": attn_mod.init_attention(k1, cfg, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "self_attn": attn_mod.init_attention(k1, cfg, dtype),
+            "norm_x": init_norm(cfg.d_model, cfg.norm, dtype),
+            "cross_attn": attn_mod.init_attention(k2, cfg, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, vocab: Optional[int] = None,
+                max_dec_len: int = 448) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    vocab = vocab or cfg.vocab_size
+    ks = jax.random.split(key, 6)
+    enc_blocks = [_init_enc_block(jax.random.fold_in(ks[0], i), cfg, dtype)
+                  for i in range(cfg.encdec.n_enc_layers)]
+    dec_blocks = [_init_dec_block(jax.random.fold_in(ks[1], i), cfg, dtype)
+                  for i in range(cfg.n_layers)]
+    return {
+        "enc": {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+                "final_norm": init_norm(cfg.d_model, cfg.norm, dtype)},
+        "dec": {"embed": init_embedding(ks[2], vocab, cfg.d_model, dtype),
+                "pos_embed": init_embedding(ks[3], max_dec_len, cfg.d_model,
+                                            dtype),
+                "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_blocks),
+                "final_norm": init_norm(cfg.d_model, cfg.norm, dtype)},
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array, *,
+           attn_impl: str = "xla") -> jax.Array:
+    """frames [B,T,D] (stub frontend output) → encoder states [B,T,D]."""
+    t = frames.shape[1]
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(t, cfg.d_model).astype(x.dtype)
+
+    def body(x, block):
+        h = apply_norm(block["norm1"], x, cfg.norm)
+        x = x + attn_mod.attention(block["attn"], cfg, h, None, causal=False,
+                                   impl=attn_impl)
+        h = apply_norm(block["norm2"], x, cfg.norm)
+        return x + apply_mlp(block["mlp"], h, cfg.mlp), None
+
+    from .transformer import apply_remat
+    body = apply_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["enc"]["blocks"])
+    return apply_norm(params["enc"]["final_norm"], x, cfg.norm)
+
+
+def forward(params: Params, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array, *, attn_impl: str = "xla"
+            ) -> Tuple[jax.Array, jax.Array]:
+    """(frames [B,T,D], tokens [B,S]) → (logits [B,S,V], aux=0)."""
+    enc_out = encode(params, cfg, frames, attn_impl=attn_impl)
+    b, s = tokens.shape
+    pos = jnp.arange(s)
+    x = jnp.take(params["dec"]["embed"], tokens, axis=0) + \
+        jnp.take(params["dec"]["pos_embed"], jnp.minimum(
+            pos, params["dec"]["pos_embed"].shape[0] - 1), axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, block):
+        h = apply_norm(block["norm1"], x, cfg.norm)
+        x = x + attn_mod.attention(block["self_attn"], cfg, h, None,
+                                   causal=True, impl=attn_impl)
+        h = apply_norm(block["norm_x"], x, cfg.norm)
+        kv = attn_mod.project_kv(block["cross_attn"], cfg, enc_out)
+        x = x + attn_mod.attention(block["cross_attn"], cfg, h, None,
+                                   cross_kv=kv, impl=attn_impl)
+        h = apply_norm(block["norm2"], x, cfg.norm)
+        return x + apply_mlp(block["mlp"], h, cfg.mlp), None
+
+    from .transformer import apply_remat
+    body = apply_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["dec"]["blocks"])
+    x = apply_norm(params["dec"]["final_norm"], x, cfg.norm)
+    logits = x @ params["dec"]["embed"].T.astype(x.dtype)  # tied head
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            attn_impl: str = "xla"):
+    from .transformer import cross_entropy
+    logits, aux = forward(params, cfg, batch["frames"], batch["tokens"],
+                          attn_impl=attn_impl)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------------
+def init_cache(params: Params, cfg: ModelConfig, frames: jax.Array,
+               max_len: int, *, attn_impl: str = "xla") -> Dict[str, Any]:
+    """Prefill: run the encoder once, precompute per-layer cross K/V."""
+    enc_out = encode(params, cfg, frames, attn_impl=attn_impl)
+    batch = frames.shape[0]
+    dtype = jnp.dtype(cfg.compute_dtype)
+
+    def per_layer(block):
+        k, v = attn_mod.project_kv(block, cfg, enc_out)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    cross = jax.vmap(lambda blk: per_layer(blk))(  # over stacked layer dim
+        params["dec"]["blocks"]["cross_attn"])
+    self_kv = attn_mod.init_kv_cache(cfg, batch, max_len, dtype, cfg.n_layers)
+    return {"len": jnp.zeros((), jnp.int32), "self": self_kv, "cross": cross}
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens [B,1] + cache → (logits [B,1,V], cache)."""
+    cache_len = cache["len"]
+    pos = jnp.minimum(cache_len, params["dec"]["pos_embed"].shape[0] - 1)
+    x = jnp.take(params["dec"]["embed"], tokens, axis=0) + \
+        jax.lax.dynamic_slice_in_dim(params["dec"]["pos_embed"], pos, 1, axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, inp):
+        block, kc, vc, cross = inp
+        h = apply_norm(block["norm1"], x, cfg.norm)
+        out, k, v = attn_mod.decode_attention(block["self_attn"], cfg, h,
+                                              kc, vc, cache_len, None)
+        x = x + out
+        h = apply_norm(block["norm_x"], x, cfg.norm)
+        x = x + attn_mod.attention(block["cross_attn"], cfg, h, None,
+                                   cross_kv=(cross["k"], cross["v"]))
+        h = apply_norm(block["norm2"], x, cfg.norm)
+        x = x + apply_mlp(block["mlp"], h, cfg.mlp)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"]["blocks"], cache["self"]["k"],
+                  cache["self"]["v"], cache["cross"]))
+    x = apply_norm(params["dec"]["final_norm"], x, cfg.norm)
+    logits = x @ params["dec"]["embed"].T.astype(x.dtype)
+    return logits, {"len": cache_len + 1, "self": {"k": ks, "v": vs},
+                    "cross": cache["cross"]}

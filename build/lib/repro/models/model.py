@@ -1,0 +1,95 @@
+"""Unified model API over the decoder-only and encoder–decoder families,
+plus the ``input_specs`` used by smoke tests, benchmarks, and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, transformer
+
+__all__ = ["Model", "train_input_specs", "serve_input_specs"]
+
+
+class Model:
+    """cfg-bound facade: init / loss / forward / cache / decode."""
+
+    def __init__(self, cfg: ModelConfig, vocab: Optional[int] = None,
+                 attn_impl: str = "xla", max_dec_len: int = 448):
+        self.cfg = cfg
+        self.vocab = vocab or cfg.vocab_size
+        self.attn_impl = attn_impl
+        self.max_dec_len = max_dec_len
+
+    # -- params ----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        if self.cfg.family == "encdec":
+            return encdec.init_params(key, self.cfg, self.vocab,
+                                      max_dec_len=self.max_dec_len)
+        return transformer.init_params(key, self.cfg, self.vocab)
+
+    def param_shapes(self) -> Dict[str, Any]:
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(params, self.cfg, batch,
+                                  attn_impl=self.attn_impl)
+        return transformer.loss_fn(params, self.cfg, batch,
+                                   attn_impl=self.attn_impl)
+
+    def forward(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.forward(params, self.cfg, batch["frames"],
+                                  batch["tokens"], attn_impl=self.attn_impl)
+        return transformer.forward(params, self.cfg, batch["tokens"],
+                                   positions=batch.get("positions"),
+                                   vision_embeds=batch.get("vision_embeds"),
+                                   attn_impl=self.attn_impl)
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, params=None,
+                   frames=None) -> Dict[str, Any]:
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(params, self.cfg, frames, max_len,
+                                     attn_impl=self.attn_impl)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, tokens, cache):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(params, self.cfg, tokens, cache)
+        return transformer.decode_step(params, self.cfg, tokens, cache)
+
+
+# ----------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (no allocation) — dry-run & smoke shapes
+# ----------------------------------------------------------------------------
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.compute_dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encdec.n_frames, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), dt)
+        specs["positions"] = jax.ShapeDtypeStruct((3, batch, seq), i32)
+    return specs
+
+
+def serve_input_specs(cfg: ModelConfig, batch: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """One decode step's fresh inputs (cache specs come from eval_shape)."""
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return specs

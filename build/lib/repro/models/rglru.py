@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence  h_t = a_t · h_{t-1} + √(1−a_t²) · (i_t ⊙ x_t)  is linear
+in h, so the full sequence runs as a ``jax.lax.associative_scan`` (log-
+depth on TPU). Decode is the single-step recurrence against an
+(lru_state, conv_state) cache. Sub-quadratic — together with the local-
+attention layers this is why recurrentgemma runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    cw = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    # Λ init so that a = sigmoid(Λ)^c lies in (0.9, 0.999) (paper §2.4)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9 ** (1 / _C),
+                           0.999 ** (1 / _C))
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), dtype) * s,        # recurrent branch
+        "w_y": jax.random.normal(ks[1], (d, w), dtype) * s,        # gated branch
+        "conv_w": jax.random.normal(ks[2], (cw, w), dtype) / math.sqrt(cw),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": jax.random.normal(ks[3], (w, w), dtype) * (1.0 / math.sqrt(w)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(ks[5], (w, w), dtype) * (1.0 / math.sqrt(w)),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.log(u / (1.0 - u)),                             # logit(a^(1/c))
+        "w_out": jax.random.normal(jax.random.fold_in(key, 7), (w, d), dtype)
+        / math.sqrt(w),
+    }
+
+
+def _gates(params: dict, x: jax.Array):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r      # log a_t  (a in (0,1))
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def apply_rglru(params: dict, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block. u: [B,S,D] → [B,S,D]."""
+    x = _causal_conv(u @ params["w_x"], params["conv_w"], params["conv_b"])
+    a, gx = _gates(params, x)                                  # [B,S,W] f32
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(u @ params["w_y"])
+    return y @ params["w_out"]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype, n_layers: int) -> dict:
+    w = _width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {
+        "state": jnp.zeros((n_layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cw - 1, w), dtype),
+    }
+
+
+def decode_rglru(params: dict, cfg: ModelConfig, u: jax.Array, state, conv):
+    """One step. u: [B,1,D]; state: [B,W]; conv: [B,CW-1,W]."""
+    xt = u[:, 0, :] @ params["w_x"]                             # [B,W]
+    window = jnp.concatenate([conv, xt[:, None, :]], axis=1)
+    new_conv = window[:, 1:, :]
+    x = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32)) + \
+        params["conv_b"].astype(jnp.float32)
+    a, gx = _gates(params, x[:, None, :])
+    state = a[:, 0] * state + gx[:, 0]
+    y = state.astype(u.dtype)[:, None, :] * jax.nn.gelu(u @ params["w_y"])
+    return y @ params["w_out"], state, new_conv

@@ -1,0 +1,167 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: within a chunk the recurrence is computed as a masked
+attention-like quadratic form (MXU-friendly); across chunks a short
+``lax.scan`` carries the [H, P, N] state. Decode is the pure recurrence
+with an (ssm_state, conv_state) cache. Attention-free — the ``long_500k``
+cell lowers through this path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import apply_norm, init_norm
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    p = cfg.ssm.head_dim
+    h = di // p
+    g = cfg.ssm.n_groups
+    conv_dim = di + 2 * g * n
+    return d, di, n, p, h, g, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, p, h, g, conv_dim = _dims(cfg)
+    w = cfg.ssm.conv_width
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # order: [z | xBC | dt]
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * g * n + h), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (w, conv_dim), dtype) * (1.0 / math.sqrt(w)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_norm(di, "rmsnorm", dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: [B,S,C]; w: [W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # unrolled tiny loop → fused multiply-adds
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def apply_ssm(params: dict, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence SSD. u: [B,S,D] → [B,S,D]."""
+    d, di, n, p, h, g, conv_dim = _dims(cfg)
+    b, s, _ = u.shape
+    q = min(cfg.ssm.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = u @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di:di + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., di + g * n:].reshape(b, s, g, n)
+    # broadcast groups over heads
+    bmat = jnp.repeat(bmat, h // g, axis=2)                     # [B,S,H,N]
+    cmat = jnp.repeat(cmat, h // g, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                # [H] negative
+    delta = dt * a                                               # log decay
+
+    # chunked layout
+    xw = (x.astype(jnp.float32) * dt[..., None]).reshape(b, nc, q, h, p)
+    bm = bmat.astype(jnp.float32).reshape(b, nc, q, h, n)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, q, h, n)
+    dl = delta.reshape(b, nc, q, h)
+    cum = jnp.cumsum(dl, axis=2)                                 # [B,NC,Q,H]
+
+    # intra-chunk: scores[i,j] = (C_i·B_j) exp(cum_i - cum_j), j ≤ i.
+    # Mask the *exponent* (not the result) so masked entries have zero
+    # gradient instead of 0·inf = NaN in the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,NC,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cm, bm)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * decay, xw)
+
+    # chunk states: S_c = Σ_j exp(cum_last - cum_j) B_j ⊗ xw_j → [B,NC,H,N,P]
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                      # [B,NC,Q,H]
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", tail, bm, xw)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # [B,NC,H]
+
+    def scan_body(carry, inp):
+        s_c, dec_c = inp                                          # [B,H,N,P],[B,H]
+        new = carry * dec_c[..., None, None] + s_c
+        return new, carry                                         # emit prev state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)            # [B,NC,H,N,P]
+
+    # inter-chunk: y_i += C_i · (exp(cum_i) * S_prev)
+    start_decay = jnp.exp(cum)                                    # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp", cm, prev_states, start_decay)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ params["out_proj"]
+
+
+# ----------------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype, n_layers: int) -> dict:
+    d, di, n, p, h, g, conv_dim = _dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "state": jnp.zeros((n_layers, batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, w - 1, conv_dim), dtype),
+    }
+
+
+def decode_ssm(params: dict, cfg: ModelConfig, u: jax.Array, state, conv):
+    """One step. u: [B,1,D]; state: [B,H,N,P]; conv: [B,W-1,C]."""
+    d, di, n, p, h, g, conv_dim = _dims(cfg)
+    b = u.shape[0]
+    zxbcdt = u[:, 0, :] @ params["in_proj"]
+    z = zxbcdt[:, :di]
+    xbc = zxbcdt[:, di:di + conv_dim]
+    dt = zxbcdt[:, di + conv_dim:]
+
+    window = jnp.concatenate([conv, xbc[:, None, :]], axis=1)     # [B,W,C]
+    new_conv = window[:, 1:, :]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                                 params["conv_w"].astype(jnp.float32))
+                      + params["conv_b"].astype(jnp.float32))
+    x = xbc[:, :di].reshape(b, h, p)
+    bm = jnp.repeat(xbc[:, di:di + g * n].reshape(b, g, n), h // g, axis=1)
+    cm = jnp.repeat(xbc[:, di + g * n:].reshape(b, g, n), h // g, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    decay = jnp.exp(dt * -jnp.exp(params["a_log"]))                # [B,H]
+    xw = x.astype(jnp.float32) * dt[..., None]                     # [B,H,P]
+    state = state * decay[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", bm, xw)
+    y = jnp.einsum("bhn,bhnp->bhp", cm, state) + \
+        x.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(u.dtype)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return (y @ params["out_proj"])[:, None, :], state, new_conv

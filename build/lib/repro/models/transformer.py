@@ -1,0 +1,330 @@
+"""Decoder-only LM assembly: heterogeneous layer groups + scan-over-layers.
+
+A model is a list of *groups*; each group is a repeating *unit* of block
+kinds (e.g. ``("attn",)`` for dense, ``("rec","rec","attn")`` for
+RecurrentGemma's 1:2 hybrid pattern). Unit parameters are stacked along a
+leading ``count`` dimension and the group runs as one ``jax.lax.scan`` —
+HLO size stays O(#groups), not O(#layers), which keeps 96-layer/512-device
+dry-run compiles tractable (DESIGN.md §6).
+
+The same group structure drives the decode path: caches are stacked per
+group and scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (apply_mlp, apply_norm, init_embedding, init_mlp,
+                     init_norm)
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# structure
+# ----------------------------------------------------------------------------
+def apply_remat(body, remat: str):
+    """Remat policy for the scan body (the §Perf lever set):
+
+    * ``none`` — no remat: everything the backward needs is saved.
+    * ``full`` — recompute everything (max memory savings; re-runs the
+      tensor-parallel collectives in the backward pass).
+    * ``dots`` — save contraction outputs (``dots_saveable``): activations
+      that sit *after* the TP all-reduces are kept, so the backward never
+      re-pays fwd collectives — at ~4× the saved-activation footprint.
+    """
+    if remat == "none":
+        return body
+    if remat == "full":
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    if remat == "dots_nobatch":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(remat)
+
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return [(("attn",), cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.hybrid.pattern)
+        full, rem = divmod(cfg.n_layers, len(pat))
+        groups: List[Tuple[Tuple[str, ...], int]] = [(pat, full)]
+        if rem:
+            groups.append((pat[:rem], 1))
+        return groups
+    raise ValueError(cfg.family)
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "attn":
+        p = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+             "attn": attn_mod.init_attention(k1, cfg, dtype),
+             "norm2": init_norm(cfg.d_model, cfg.norm, dtype)}
+        if cfg.family == "moe":
+            p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+        return p
+    if kind == "ssm":
+        return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+                "ssm": ssm_mod.init_ssm(k1, cfg, dtype)}
+    if kind == "rec":
+        return {"norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+                "rec": rglru_mod.init_rglru(k1, cfg, dtype),
+                "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig, vocab: Optional[int] = None) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    vocab = vocab or cfg.vocab_size
+    keys = jax.random.split(key, 8)
+    groups = []
+    for gi, (unit, count) in enumerate(layer_groups(cfg)):
+        stacked_units = []
+        for ci in range(count):
+            ku = jax.random.fold_in(keys[0], gi * 10_000 + ci)
+            unit_params = [
+                _init_block(jax.random.fold_in(ku, pi), cfg, kind, dtype)
+                for pi, kind in enumerate(unit)
+            ]
+            stacked_units.append(unit_params)
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked_units))
+    params: Params = {
+        "embed": init_embedding(keys[1], vocab, cfg.d_model, dtype),
+        "groups": groups,
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_embedding(keys[2], vocab, cfg.d_model, dtype).T
+    return params
+
+
+# ----------------------------------------------------------------------------
+# forward (training / prefill)
+# ----------------------------------------------------------------------------
+def _apply_unit(unit_params, cfg: ModelConfig, unit: Tuple[str, ...],
+                x: jax.Array, positions, aux: jax.Array,
+                attn_impl: str) -> Tuple[jax.Array, jax.Array]:
+    from repro.dist import api as dist_api
+    x = dist_api.hint(x)
+    for block, kind in zip(unit_params, unit):
+        if kind == "attn":
+            window = cfg.hybrid.window if cfg.family == "hybrid" else None
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            x = x + attn_mod.attention(block["attn"], cfg, h, positions,
+                                       causal=True, window=window,
+                                       impl=attn_impl)
+            h = apply_norm(block["norm2"], x, cfg.norm)
+            if "moe" in block:
+                y, a = moe_mod.apply_moe(block["moe"], cfg, h)
+                aux = aux + a
+            else:
+                y = apply_mlp(block["mlp"], h, cfg.mlp)
+            x = x + y
+        elif kind == "ssm":
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            x = x + ssm_mod.apply_ssm(block["ssm"], cfg, h)
+        elif kind == "rec":
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            x = x + rglru_mod.apply_rglru(block["rec"], cfg, h)
+            h = apply_norm(block["norm2"], x, cfg.norm)
+            x = x + apply_mlp(block["mlp"], h, cfg.mlp)
+        else:
+            raise ValueError(kind)
+    return x, aux
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 vision_embeds: Optional[jax.Array]) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if vision_embeds is not None:
+        p = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, p:, :]], axis=1)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            vision_embeds: Optional[jax.Array] = None,
+            attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,S] → (logits [B,S,V], aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        positions = jnp.broadcast_to(base, (3, b, s)) if cfg.m_rope else base
+    x = embed_inputs(params, cfg, tokens, vision_embeds)
+    aux = jnp.zeros((), jnp.float32)
+
+    for gi, (unit, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+
+        def body(carry, layer_params, unit=unit):
+            x, aux = carry
+            x, aux = _apply_unit(layer_params, cfg, unit, x, positions, aux,
+                                 attn_impl)
+            return (x, aux), None
+
+        body = apply_remat(body, cfg.remat)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), gp)
+        else:
+            for ci in range(count):
+                (x, aux), _ = body((x, aux), jax.tree.map(lambda a: a[ci], gp))
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            attn_impl: str = "xla") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token cross entropy (+ MoE aux). Sharded-vocab-safe: the
+    label logit is picked with a fused compare-select-reduce, not a gather."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          positions=batch.get("positions"),
+                          vision_embeds=batch.get("vision_embeds"),
+                          attn_impl=attn_impl)
+    labels = batch["labels"]
+    ce = cross_entropy(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Sharded-vocab-safe mean CE: the [B,S,V] one-hot select is pinned to
+    the vocab sharding (dist_api.hint_vocab) so it never replicates V."""
+    from repro.dist import api as dist_api
+    lf = dist_api.hint_vocab(logits.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=labels.dtype)
+    onehot = dist_api.hint_vocab(
+        (labels[..., None] == vocab_iota).astype(jnp.float32))
+    label_logit = jnp.sum(dist_api.hint_vocab(lf * onehot), axis=-1)
+    return jnp.mean(lse - label_logit)
+
+
+# ----------------------------------------------------------------------------
+# decode (one token, cache-carrying)
+# ----------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    groups = []
+    for unit, count in layer_groups(cfg):
+        unit_caches = []
+        for kind in unit:
+            if kind == "attn":
+                unit_caches.append(attn_mod.init_kv_cache(
+                    cfg, batch,
+                    max_len if cfg.family != "hybrid"
+                    else min(max_len, cfg.hybrid.window),
+                    dtype, count))
+            elif kind == "ssm":
+                unit_caches.append(ssm_mod.init_ssm_cache(cfg, batch, dtype, count))
+            elif kind == "rec":
+                unit_caches.append(rglru_mod.init_rglru_cache(cfg, batch, dtype,
+                                                              count))
+        groups.append(unit_caches)
+    return {"len": jnp.zeros((), jnp.int32), "groups": groups}
+
+
+def _decode_unit(unit_params, unit_cache, cfg: ModelConfig,
+                 unit: Tuple[str, ...], x: jax.Array, cache_len,
+                 positions) -> Tuple[jax.Array, list]:
+    new_caches = []
+    for block, cache, kind in zip(unit_params, unit_cache, unit):
+        if kind == "attn":
+            window = cfg.hybrid.window if cfg.family == "hybrid" else None
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            if window is not None:
+                # ring-buffer cache for local attention: slot = len % capacity
+                slot = jnp.remainder(cache_len, cache["k"].shape[1])
+                out, k, v = attn_mod.decode_attention(
+                    block["attn"], cfg, h, cache["k"], cache["v"], cache_len,
+                    positions, window=None, write_pos=slot)
+            else:
+                out, k, v = attn_mod.decode_attention(
+                    block["attn"], cfg, h, cache["k"], cache["v"], cache_len,
+                    positions, window=None)
+            x = x + out
+            h = apply_norm(block["norm2"], x, cfg.norm)
+            if "moe" in block:
+                y, _ = moe_mod.apply_moe(block["moe"], cfg, h)
+            else:
+                y = apply_mlp(block["mlp"], h, cfg.mlp)
+            x = x + y
+            new_caches.append({"k": k, "v": v})
+        elif kind == "ssm":
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            y, state, conv = ssm_mod.decode_ssm(block["ssm"], cfg, h,
+                                                cache["state"], cache["conv"])
+            x = x + y
+            new_caches.append({"state": state, "conv": conv})
+        elif kind == "rec":
+            h = apply_norm(block["norm1"], x, cfg.norm)
+            y, state, conv = rglru_mod.decode_rglru(block["rec"], cfg, h,
+                                                    cache["state"], cache["conv"])
+            x = x + y
+            h = apply_norm(block["norm2"], x, cfg.norm)
+            x = x + apply_mlp(block["mlp"], h, cfg.mlp)
+            new_caches.append({"state": state, "conv": conv})
+    return x, new_caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict[str, Any], *,
+                positions: Optional[jax.Array] = None,
+                vision_embeds: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens [B,1] + cache → (logits [B,1,V], updated cache)."""
+    b = tokens.shape[0]
+    cache_len = cache["len"]
+    if positions is None:
+        base = jnp.broadcast_to(cache_len[None, None], (b, 1)).astype(jnp.int32)
+        positions = jnp.broadcast_to(base, (3, b, 1)) if cfg.m_rope else base
+    x = embed_inputs(params, cfg, tokens, vision_embeds)
+
+    new_groups = []
+    for gi, (unit, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        gc = cache["groups"][gi]
+
+        def body(x, inp, unit=unit):
+            layer_params, layer_cache = inp
+            x, new_cache = _decode_unit(layer_params, layer_cache, cfg, unit,
+                                        x, cache_len, positions)
+            return x, new_cache
+
+        if cfg.scan_layers:
+            x, new_gc = jax.lax.scan(body, x, (gp, gc))
+        else:
+            outs = []
+            for ci in range(count):
+                x, nc = body(x, jax.tree.map(lambda a: a[ci], (gp, gc)))
+                outs.append(nc)
+            new_gc = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_groups.append(new_gc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, {"len": cache_len + 1, "groups": new_groups}

@@ -1,0 +1,19 @@
+"""Network-transparent distribution: nodes, brokers, and the spill-based
+wire format (paper §2.1/§3.5 taken across the process boundary).
+
+    system = ActorSystem("driver")
+    node = NodeRuntime(system, name="driver", listen=("127.0.0.1", 0))
+    # ... a worker process connects and publishes actors ...
+    node.wait_for_peer("worker")
+    stage = node.remote_actor("worker", "stage-square")
+    out_ref = stage.ask(DeviceRef.put(x))   # spill → wire → unspill → ref
+
+Remote handles are ordinary :class:`~repro.core.ActorRef`\\ s
+(:class:`RemoteActorRef`), so pools, schedulers, pipelines, and the
+``dist.fault`` supervisors take them unchanged.
+"""
+from .node import NodeDown, NodeRuntime, PayloadError, RemoteActorRef
+from . import wire
+
+__all__ = ["NodeDown", "NodeRuntime", "PayloadError", "RemoteActorRef",
+           "wire"]

@@ -1,0 +1,4 @@
+from . import adamw, schedule
+from .adamw import AdamWConfig
+
+__all__ = ["adamw", "schedule", "AdamWConfig"]

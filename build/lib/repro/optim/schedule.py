@@ -1,0 +1,21 @@
+"""LR schedules (scale factors composed with AdamWConfig.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return warm * cos
+    return schedule
+
+
+def constant():
+    def schedule(step):
+        return 1.0
+    return schedule

@@ -1,0 +1,5 @@
+from . import analysis
+from .analysis import Roofline, analyze, model_flops_for, parse_collectives
+
+__all__ = ["analysis", "Roofline", "analyze", "model_flops_for",
+           "parse_collectives"]
