@@ -1,0 +1,188 @@
+"""Unified cost-model placement vs scattered heuristics (ISSUE 10).
+
+The pre-PR10 runtime made cross-node offload a *static* user decision:
+you spawned the kernel on the peer by hand and every call paid the raw
+wire round trip, whether or not the hop was worth it. The unified
+:class:`~repro.core.placement.PlacementService` prices the hop per typed
+edge (BENCH_PR5-seeded latency/throughput, int8 amortization, live peer
+load) and places the graph accordingly. This benchmark measures what
+that buys on a two-in-process-node localhost pair:
+
+* **end-to-end wall time** — the same one-kernel graph driven through a
+  hand-placed remote actor (baseline) vs through ``Graph.build`` with
+  the cost model deciding (it keeps the node local: the hop never
+  amortizes against a ~300 µs local dispatch);
+* **transfers avoided / bytes on wire** — request+reply hops and wire
+  bytes the baseline pays that the unified placement doesn't;
+* **int8 amortization** — with local cost inflated past the modeled
+  round trip, the service *does* choose the hop and picks the int8
+  encoding, cutting bytes-on-wire by the measured compression ratio.
+
+``--smoke`` (or ``run(smoke=True)``) runs 3 reps and asserts the
+decisions (local under honest costs, ``wire-amortized:int8`` under
+inflated ones) and the byte accounting — cheap enough for CI; the
+``BENCH_PR10.json`` snapshot is only written by full runs.
+
+    PYTHONPATH=src python -m benchmarks.bench_placement
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timeit
+
+_N = 1 << 16                    # float32 elements per activation (256 KiB)
+_ROWS: dict = {}
+
+
+def _scale_impl(x):
+    return x * 2.0
+
+
+def _make_kernel():
+    from repro.core import In, NDRange, Out, dim_vec, kernel
+    return kernel(In(jnp.float32), Out(jnp.float32),
+                  nd_range=NDRange(dim_vec(_N)),
+                  name="bench_scale")(_scale_impl)
+
+
+def _build_graph(system, decl, name, remotes=()):
+    from repro.core import Graph
+    g = Graph(system, name=name)
+    x = g.source("x", jnp.float32, shape=(_N,))
+    g.output(g.apply(decl, x))
+    return g.build(remotes=list(remotes))
+
+
+def run(smoke: bool = False) -> None:
+    from repro.core import ActorSystem, DeviceRef
+    from repro.core.placement import (NodeTarget, PlacementService,
+                                      WireCostModel, set_service)
+    from repro.net import NodeRuntime, wire
+
+    repeat = 3 if smoke else 15
+    decl = _make_kernel()
+    x = np.random.RandomState(0).randn(_N).astype(np.float32)
+
+    sa = ActorSystem("bench-pa", max_workers=4)
+    sb = ActorSystem("bench-pb", max_workers=4)
+    na = NodeRuntime(sa, name="a", listen=("127.0.0.1", 0))
+    nb = NodeRuntime(sb, name="b")
+    nb.connect(na.address)
+    na.wait_for_peer("b", 30)
+
+    bench_path = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_PR5.json"
+    seeded = (WireCostModel.from_bench(str(bench_path))
+              if bench_path.exists() else WireCostModel())
+
+    prev = set_service(PlacementService(wire=seeded))
+    try:
+        # -- baseline: hand-placed remote kernel, raw wire ----------------
+        na.compress = False
+        remote = na.spawn_remote("b", decl)
+        t_base = timeit(lambda: remote.ask(x), repeat=repeat)
+        req_raw = wire.encoded_size((x,))
+        base_bytes = 2 * req_raw            # request + ~same-size reply
+        emit("placement/baseline_remote_raw_us", t_base * 1e6)
+        emit("placement/baseline_wire_bytes", base_bytes, "per call")
+
+        # -- unified: the cost model keeps the graph local ----------------
+        target = NodeTarget(na, "b")
+        built = _build_graph(sa, decl, "unified", remotes=[target])
+        dec = built.placement_decisions[0]
+        local = not isinstance(built.placements["unified/bench_scale"],
+                               NodeTarget)
+        t_unified = timeit(lambda: built.ask(x), repeat=repeat)
+        uni_bytes = 0 if local else base_bytes
+        avoided = 2 * repeat if local else 0
+        emit("placement/unified_us", t_unified * 1e6,
+             f"x{t_base / max(t_unified, 1e-9):.1f} vs hand-placed remote")
+        emit("placement/unified_wire_bytes", uni_bytes, dec.reason)
+        emit("placement/transfers_avoided", avoided,
+             f"hops over {repeat} calls")
+
+        # -- inflated local cost: the hop amortizes, int8 wins ------------
+        ballast = DeviceRef(jnp.zeros(1 << 20, jnp.float32))
+        na.compress = "auto"
+        costly = PlacementService(
+            wire=WireCostModel(latency_s=1e-4, bytes_per_s=1e8,
+                               min_compress_bytes=1),
+            mem_s_per_byte=1e-3)
+        set_service(costly)
+        built_r = _build_graph(sa, decl, "offload", remotes=[target])
+        dec_r = built_r.placement_decisions[0]
+        t_remote = timeit(lambda: built_r.ask(x), repeat=repeat)
+        req_int8 = wire.encoded_size((DeviceRef.put(x),), compress=True)
+        emit("placement/amortized_remote_us", t_remote * 1e6, dec_r.reason)
+        emit("placement/int8_wire_bytes", 2 * req_int8,
+             f"{req_raw / req_int8:.2f}x smaller than raw")
+        ballast.release()
+
+        _ROWS.update({
+            "baseline_remote_raw_us": round(t_base * 1e6, 1),
+            "unified_us": round(t_unified * 1e6, 1),
+            "unified_reason": dec.reason,
+            "unified_local": local,
+            "baseline_wire_bytes_per_call": base_bytes,
+            "unified_wire_bytes_per_call": uni_bytes,
+            "transfers_avoided": avoided,
+            "amortized_remote_us": round(t_remote * 1e6, 1),
+            "amortized_reason": dec_r.reason,
+            "int8_wire_bytes_per_call": 2 * req_int8,
+            "int8_vs_raw_ratio": round(req_raw / req_int8, 2),
+        })
+
+        if smoke:
+            assert local, f"cost model offloaded a ~free kernel: {dec}"
+            assert dec.reason in ("least-loaded", "inherit-upstream"), dec
+            assert any(a.target == "node:b" for a in dec.alternatives), \
+                "the rejected hop must be in the audit record"
+            assert dec_r.reason == "wire-amortized:int8", dec_r
+            assert avoided > 0 and uni_bytes < base_bytes
+            assert req_int8 < req_raw / 2.5, (req_raw, req_int8)
+            print("smoke ok:", _ROWS["unified_reason"], "/",
+                  _ROWS["amortized_reason"])
+    finally:
+        set_service(prev)
+        na.shutdown()
+        nb.shutdown()
+        sa.shutdown()
+        sb.shutdown()
+    if not smoke:
+        _write_snapshot()
+
+
+def _write_snapshot() -> None:
+    import jax
+
+    snap = {
+        "pr": 10,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "workload": {
+            "graph": "source -> scale kernel -> output, float32 "
+                     f"n={_N}, localhost socket pair, in-process nodes",
+            "baseline": "hand-placed spawn_remote kernel, raw wire",
+            "unified": "Graph.build(remotes=[node:b]) under the "
+                       "BENCH_PR5-seeded cost model",
+        },
+        "results": _ROWS,
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR10.json"
+    out.write_text(json.dumps(snap, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":  # pragma: no cover - manual invocation
+    import sys
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

@@ -14,10 +14,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_graph, bench_indexing, bench_iterated,
                    bench_kvpool, bench_mesh, bench_net, bench_offload,
-                   bench_overhead, bench_serve, bench_spawn)
+                   bench_overhead, bench_placement, bench_serve,
+                   bench_spawn)
     for mod in (bench_spawn, bench_overhead, bench_iterated, bench_offload,
                 bench_indexing, bench_serve, bench_kvpool, bench_graph,
-                bench_net, bench_mesh):
+                bench_net, bench_mesh, bench_placement):
         mod.run()
     print("\n== roofline table (from dry-run artifacts) ==")
     from . import roofline_table

@@ -121,8 +121,13 @@ def _iter_py_files(paths: Sequence[str]) -> Iterable[str]:
     for p in paths:
         if os.path.isdir(p):
             for root, dirs, files in os.walk(p):
-                dirs[:] = sorted(d for d in dirs
-                                 if d not in ("__pycache__", ".git"))
+                # build trees and egg-info hold stale copies of the
+                # package — linting them would shadow real findings with
+                # duplicates from snapshots nobody edits
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if d not in ("__pycache__", ".git", "build", "dist")
+                    and not d.endswith(".egg-info"))
                 for f in sorted(files):
                     if f.endswith(".py"):
                         yield os.path.join(root, f)

@@ -37,8 +37,12 @@ from .facade import KernelActor
 from .graph import Graph, GraphNode, GraphPlan, GraphRef, Port, PortType
 from .manager import Device, DeviceManager, Platform, Program
 from .memref import (DeviceRef, RefRegistry, as_device_array, live_ref_count,
-                     memory_stats, reset_transfer_stats, transfer_count,
-                     tree_release, tree_unwrap, tree_wrap)
+                     memory_stats, payload_nbytes, reset_transfer_stats,
+                     transfer_count, tree_release, tree_unwrap, tree_wrap)
+from .placement import (NodeTarget, PlacementDecision, PlacementService,
+                        WireCostModel)
+from .placement import service as placement_service
+from .placement import set_service as set_placement_service
 from .scheduler import ChunkScheduler, split_offload
 from .signature import In, InOut, KernelSignature, Local, NDRange, Out, Priv, dim_vec
 
@@ -57,5 +61,7 @@ __all__ = [
     "memory_stats", "reset_transfer_stats", "transfer_count",
     "tree_release", "tree_unwrap", "tree_wrap",
     "ChunkScheduler", "split_offload",
+    "NodeTarget", "PlacementDecision", "PlacementService", "WireCostModel",
+    "placement_service", "set_placement_service", "payload_nbytes",
     "In", "InOut", "KernelSignature", "Local", "NDRange", "Out", "Priv", "dim_vec",
 ]

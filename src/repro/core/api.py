@@ -45,7 +45,7 @@ from typing import Any, Callable, List, Optional, Sequence, Union
 
 from ..analysis.runtime import make_lock
 from .actor import ActorRef, ActorSystem
-from .memref import payload_device
+from .placement import service as placement_service
 from .signature import KernelSignature, NDRange
 
 __all__ = ["kernel", "KernelDecl", "Pipeline", "ActorPool"]
@@ -392,6 +392,12 @@ class ActorPool:
     Quacks like an :class:`ActorRef` (``send``/``request``/``ask``/
     ``is_alive``) and exposes ``.workers``/``.placements`` so it plugs
     directly into :class:`~repro.core.scheduler.ChunkScheduler`.
+
+    Both policies and the residency preference are evaluated by the
+    process-wide :class:`~repro.core.placement.PlacementService` — the
+    pool feeds its candidates and outstanding counters in and routes to
+    whatever the service's auditable
+    :class:`~repro.core.placement.PlacementDecision` picks.
     """
 
     def __init__(self, system: ActorSystem, workers: Sequence[ActorRef], *,
@@ -445,7 +451,11 @@ class ActorPool:
 
     # -- routing ------------------------------------------------------
     def _pick(self, payload: tuple = (), exclude=frozenset()) -> ActorRef:
-        # caller must hold self._lock (routing state: _rr, _outstanding)
+        # caller must hold self._lock (routing state: _rr, _outstanding).
+        # Ranking itself — residency preference, least-loaded ordering,
+        # round-robin fallback — lives in the process-wide placement
+        # service; the pool only maintains membership and the outstanding
+        # counters it feeds in as a cost term
         live = [w for w in self._workers if w.is_alive()]
         if not live:
             raise RuntimeError("no live workers in pool")
@@ -453,28 +463,12 @@ class ActorPool:
             kept = [w for w in live if w.actor_id not in exclude]
             if kept:  # exclusion is a preference: never strand a payload
                 live = kept
-        pref = payload_device(payload)
-        matched = False
-        if pref is not None:
-            local = [w for w in live
-                     if (d := self._devices.get(w.actor_id)) is not None
-                     and d.jax_device == pref]
-            if local:
-                live = local
-                matched = True
-        if self.policy == "round_robin" and not matched:
-            # no member holds the payload's data (or the payload carries
-            # none): plain round-robin — off-node members have no local
-            # device/load signal, so load-ranking them would be fiction
-            return live[next(self._rr) % len(live)]
-
-        def load(w: ActorRef):
-            dev = self._devices.get(w.actor_id)
-            return (self._outstanding.get(w.actor_id, 0),
-                    dev.queue_depth() if dev is not None else 0,
-                    dev.live_bytes() if dev is not None else 0)
-
-        return min(live, key=load)
+        decision = placement_service().rank(
+            [(w.actor_id, self._devices.get(w.actor_id)) for w in live],
+            payload, outstanding=self._outstanding, policy=self.policy,
+            rr_tick=lambda: next(self._rr),
+            context=f"pool:{self.policy}")
+        return next(w for w in live if w.actor_id == decision.chosen)
 
     def send(self, *payload: Any) -> None:
         with self._lock:

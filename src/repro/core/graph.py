@@ -22,9 +22,11 @@ case; this module generalizes composition to a declarative **DAG**:
 ``Graph.build()`` validates the topology **at build time** — cycle
 detection, dangling/arity/dtype-mismatch errors, each raised as a distinct
 :class:`~repro.core.errors.GraphError` subclass naming the offending node
-path — then topologically schedules nodes onto devices (explicit
-``device=`` wins, else inherit the upstream producer's device, else the
-least-loaded device by live DeviceRef bytes) and lowers every interior
+path — then delegates whole-DAG placement to the process-wide
+:class:`~repro.core.placement.PlacementService` (explicit ``device=``
+wins, else inherit the upstream producer's device, else the cost-ranked
+local device — or a remote :class:`~repro.core.placement.NodeTarget`
+when the wire cost model says the hop amortizes) and lowers every interior
 edge to **ref-emitting** actors: a kernel whose consumers can all unwrap
 :class:`~repro.core.memref.DeviceRef`\\ s is spawned (or cloned) with
 ``emit="ref"``, so interior edges move zero bytes through the host — the
@@ -55,6 +57,8 @@ from .api import KernelDecl, _bound_fn
 from .errors import (ArityMismatchError, DanglingPortError, GraphCycleError,
                      GraphError, PortTypeMismatchError)
 from .memref import DeviceRef, as_device_array, registry
+from .placement import GraphSite, NodeTarget
+from .placement import service as placement_service
 
 __all__ = ["Graph", "GraphNode", "GraphPlan", "GraphRef", "Port", "PortType"]
 
@@ -111,6 +115,18 @@ class Port:
 _STRUCTURAL = ("broadcast", "zip_join", "select", "merge")
 #: node kinds backed by a spawned actor at runtime
 _ACTOR_KINDS = ("kernel", "actor", "func", "map_over")
+
+
+def _edge_bytes(types) -> Optional[int]:
+    """Total payload bytes crossing a set of typed edges, or None when
+    any edge is untyped — an unknown edge size means the wire-cost model
+    cannot price the hop, so such nodes are never placed remotely."""
+    total = 0
+    for t in types:
+        if t is None or t.dtype is None or t.shape is None:
+            return None
+        total += int(np.prod(t.shape, dtype=np.int64)) * t.dtype.itemsize
+    return total
 
 
 class GraphNode:
@@ -570,8 +586,21 @@ class Graph:
         return self._kernel_actor_of(node.target).out_structs(structs)
 
     # -- lowering ----------------------------------------------------------
-    def build(self, fuse: bool = False) -> "GraphRef":
+    def build(self, fuse: bool = False,
+              remotes: Sequence[NodeTarget] = ()) -> "GraphRef":
         """Validate, place, lower, and spawn; returns a :class:`GraphRef`.
+
+        Placement is delegated to the process-wide
+        :class:`~repro.core.placement.PlacementService`: explicit
+        ``device=`` pins win, then upstream inheritance, then the
+        least-loaded local device — and with ``remotes=`` (a sequence of
+        :class:`~repro.core.placement.NodeTarget`\\ s wrapping connected
+        peers) kernel nodes may land *cross-node*, but only where the
+        wire cost model says the hop is cheaper than staying local (e.g.
+        because int8 compression amortizes it, or the peer is idle while
+        every local device is saturated). The per-node
+        :class:`~repro.core.placement.PlacementDecision` audit records are
+        exposed as ``GraphRef.placement_decisions``.
 
         Interior kernel edges are lowered to ``emit="ref"`` actors (zero
         host transfers between nodes); terminal kernels — those feeding a
@@ -598,13 +627,13 @@ class Graph:
         refcap = {n.idx: self._ref_capable(n) for n in self.nodes}
         # placement runs over the whole DAG before anything is spawned:
         # the fusion pass and the inline-dispatch table both need every
-        # node's device up front
-        placements: Dict[int, Any] = {}
-        for node in topo:
-            if node.kind in _ACTOR_KINDS:
-                device = self._place(node, placements, mngr)
-                if device is not None:
-                    placements[node.idx] = device
+        # node's device up front. The cost-model service decides; this
+        # module only describes the sites (pins, edges, typed byte sizes)
+        sites = [self._placement_site(n) for n in topo
+                 if n.kind in _ACTOR_KINDS]
+        placements, decisions = placement_service().place_graph(
+            sites, mngr.devices(), remotes=list(remotes),
+            context=f"graph:{id(self):x}")
 
         regions = (self._fuse_regions(topo, consumers, outset, placements)
                    if fuse else [])
@@ -647,6 +676,7 @@ class Graph:
         plan = GraphPlan(self, topo, consumers, refs, placements,
                          regions=regions, member_of=member_of,
                          tail_of=tail_of, inline_ok=inline_ok)
+        plan.decisions = decisions
         ref = self.system.spawn(_GraphActor(plan))
         gref = GraphRef(ref.actor_id, self.system)
         gref.plan = plan
@@ -654,6 +684,7 @@ class Graph:
                            for i, d in placements.items()}
         gref.node_refs = {self.nodes[i].path: r
                           for i, r in refs.items() if r is not None}
+        gref.placement_decisions = decisions
         return gref
 
     # -- fusion pass -------------------------------------------------------
@@ -695,6 +726,10 @@ class Graph:
         if v.kind == "kernel" and v.target.preprocess is not None:
             return None
         du, dv = placements.get(u.idx), placements.get(v.idx)
+        if isinstance(du, NodeTarget) or isinstance(dv, NodeTarget):
+            # a remotely placed node runs inside another process; its
+            # traceable cannot join a locally jitted region
+            return None
         if du is None and dv is None:
             return v
         if du is None or dv is None:
@@ -714,7 +749,8 @@ class Graph:
         regions: List[List[GraphNode]] = []
         assigned: set = set()
         for node in topo:
-            if node.idx in assigned or not self._fusible_node(node):
+            if node.idx in assigned or not self._fusible_node(node) or \
+                    isinstance(placements.get(node.idx), NodeTarget):
                 continue
             region = [node]
             while True:
@@ -883,26 +919,38 @@ class Graph:
                 return False
         return True
 
-    def _place(self, node: GraphNode, placements, mngr):
-        """Topological device placement: explicit > inherit the first
-        placed upstream producer's device > least live-DeviceRef bytes."""
-        if node.device is not None:
-            return node.device
+    def _placement_site(self, node: GraphNode) -> GraphSite:
+        """Describe one node to the placement service: explicit pins,
+        upstream producers (inheritance candidates), and the typed edge
+        byte sizes the wire-cost model prices a cross-node hop by.
+        Existing actor refs are *fixed* — they already live somewhere —
+        and only kernel declarations may be spawned remotely (their
+        declarations pickle; opaque Python stages and map_over pools stay
+        on the driver)."""
+        pinned, fixed = node.device, False
         if node.kind == "actor":
             ka = self._kernel_actor_of(node.target)
-            return ka.device if ka is not None else None
-        for p in node.inputs:
-            d = placements.get(p.node.idx)
-            if d is not None:
-                return d
-        devs = mngr.devices()
-        if not devs:
-            return None
-        return min(devs, key=lambda d: (d.live_bytes(), d.queue_depth()))
+            pinned = ka.device if ka is not None else None
+            fixed = True
+        return GraphSite(
+            idx=node.idx, path=node.path, pinned=pinned, fixed=fixed,
+            producers=tuple(p.node.idx for p in node.inputs
+                            if p is not None),
+            in_bytes=_edge_bytes(p.type for p in node.inputs
+                                 if p is not None),
+            out_bytes=_edge_bytes(node.out_types),
+            remote_ok=node.kind == "kernel" and node.device is None)
 
     def _spawn_node(self, node: GraphNode, device, want_ref: bool, mngr
                     ) -> ActorRef:
         if node.kind == "kernel":
+            if isinstance(device, NodeTarget):
+                # cross-node placement: the declaration pickles over the
+                # wire and spawns in the peer's actor system; data routing
+                # is unchanged (requests auto-spill at the wire, replies
+                # unspill onto the driver's device)
+                return device.spawn(node.target,
+                                    emit="ref" if want_ref else "declared")
             return mngr.spawn(node.target, device=device,
                               emit="ref" if want_ref else "declared")
         if node.kind == "actor":
@@ -1001,7 +1049,7 @@ class GraphPlan:
     __slots__ = ("name", "nodes", "order", "sources", "outputs", "outset",
                  "consumers", "refs", "placements", "chain_refs",
                  "fused_regions", "member_of", "produce_as", "inline_ok",
-                 "counters", "_counters_lock")
+                 "counters", "_counters_lock", "decisions")
 
     def __init__(self, graph: Graph, topo, consumers, refs, placements, *,
                  regions=(), member_of=None, tail_of=None, inline_ok=None):
@@ -1014,6 +1062,8 @@ class GraphPlan:
         self.consumers = consumers
         self.refs = refs
         self.placements = placements
+        #: per-node PlacementDecision audit records (set by build())
+        self.decisions: list = []
         self.fused_regions = [[n.path for n in r] for r in regions]
         self.member_of = dict(member_of or {})
         self.produce_as = dict(tail_of or {})
@@ -1081,9 +1131,11 @@ class _GraphActor(Actor):
 
 class GraphRef(ActorRef):
     """An :class:`ActorRef` to a built graph, plus build artifacts:
-    ``placements`` (node path → Device), ``node_refs`` (node path →
-    ActorRef), and the plan used by Pipeline inlining (which also carries
-    ``plan.fused_regions`` and the dispatch counters behind
+    ``placements`` (node path → Device or
+    :class:`~repro.core.placement.NodeTarget`), ``node_refs`` (node path →
+    ActorRef), ``placement_decisions`` (the cost-model service's auditable
+    per-node records), and the plan used by Pipeline inlining (which also
+    carries ``plan.fused_regions`` and the dispatch counters behind
     :attr:`dispatch_stats`).
 
     :meth:`ask` runs the plan **directly on the calling thread** instead
@@ -1094,7 +1146,7 @@ class GraphRef(ActorRef):
     mailbox path (and with it PR 5's supervision semantics end to end).
     """
 
-    __slots__ = ("plan", "placements", "node_refs")
+    __slots__ = ("plan", "placements", "node_refs", "placement_decisions")
 
     @property
     def dispatch_stats(self) -> dict:

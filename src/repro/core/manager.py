@@ -169,6 +169,17 @@ class DeviceManager:
                            "fragmentation": ps["fragmentation"]}
         return out
 
+    def pick_device(self, *, context: str = "manager") -> Device:
+        """Cost-ranked device choice through the process-wide
+        :class:`~repro.core.placement.PlacementService` (least live
+        DeviceRef bytes, then queue depth, deterministic name tie-break)
+        — the load-aware counterpart of :meth:`find_device`'s static
+        first-discovered binding. The decision lands in the service's
+        audit ring like every other placement."""
+        from .placement import service as placement_service
+        return placement_service().pick_device(self.devices(),
+                                               context=context).chosen
+
     # -- program / actor creation -------------------------------------------
     def create_program(self, kernels: Dict[str, Callable],
                        device: Optional[Device] = None, **options) -> Program:

@@ -48,6 +48,7 @@ __all__ = [
     "reset_transfer_stats",
     "memory_stats",
     "payload_device",
+    "payload_nbytes",
     "tree_wrap",
     "tree_unwrap",
     "tree_release",
@@ -83,7 +84,7 @@ class RefRegistry:
     def __init__(self):
         # reentrant: DeviceRef.__del__ releases through the registry, so
         # a GC pass triggered inside a locked registry method re-enters
-        # this lock on the same thread (see analysis/ORDER.md, rank 19)
+        # this lock on the same thread (see analysis/ORDER.md, rank 20)
         self._lock = make_rlock("RefRegistry")
         self._count = 0
         self._bytes: Dict[Any, int] = {}
@@ -255,6 +256,28 @@ def payload_device(payload) -> Optional[jax.Device]:
         if isinstance(v, DeviceRef) and v.device is not None and not v.is_spilled:
             return v.device
     return None
+
+
+def payload_nbytes(payload) -> int:
+    """Total array bytes a payload would move — the size term
+    :mod:`repro.core.placement`'s wire-cost model prices hops by. Walks
+    the same container shapes the wire codec freezes (tuples, lists,
+    dicts) and counts DeviceRefs, jax arrays, and numpy arrays; opaque
+    Python objects count zero (their pickled size is envelope noise next
+    to array payloads)."""
+    total = 0
+    stack = [payload]
+    while stack:
+        v = stack.pop()
+        if isinstance(v, DeviceRef):
+            total += v.nbytes
+        elif isinstance(v, (tuple, list)):
+            stack.extend(v)
+        elif isinstance(v, dict):
+            stack.extend(v.values())
+        elif isinstance(v, (jax.Array, np.ndarray)):
+            total += int(v.nbytes)
+    return total
 
 
 class DeviceRef:

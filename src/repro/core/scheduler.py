@@ -34,7 +34,8 @@ from typing import Any, Callable, List, Optional, Sequence
 from ..analysis.runtime import make_rlock
 from .actor import ActorRef
 from .errors import DeadlineExceeded
-from .memref import payload_device, tree_release
+from .memref import tree_release
+from .placement import service as placement_service
 
 __all__ = ["split_offload", "ChunkScheduler", "WorkItem"]
 
@@ -173,13 +174,10 @@ class ChunkScheduler:
         jd = getattr(dev, "jax_device", None) if dev is not None else None
         if jd is None and not self._placements:
             return edf(range(len(pending)))
-        local, neutral = [], []
-        for i, item in enumerate(pending):
-            pd = payload_device(item.payload)
-            if pd is None:
-                neutral.append(i)
-            elif jd is not None and pd == jd:
-                local.append(i)
+        # residency classification is the placement service's call — the
+        # same cost source pools and graphs rank by
+        local, neutral = placement_service().classify_chunks(
+            [item.payload for item in pending], jd)
         if local:
             return edf(local)
         if neutral:

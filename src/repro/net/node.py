@@ -183,6 +183,11 @@ class NodeRuntime:
         free port; see :attr:`address`).
     compress : int8-compress float refs at the wire boundary
         (:func:`repro.dist.collectives.quantize_ref` wire format).
+        ``True``/``False`` force the choice; ``"auto"`` delegates it per
+        payload to the process-wide placement service's wire-cost model
+        (:meth:`repro.core.placement.PlacementService.choose_compress`),
+        which compresses only when the estimated bytes saved amortize the
+        quantization pass on this hop.
     unspill_device : where inbound refs land (``Device`` wrapper, bare
         ``jax.Device``, or None for the process default) — the paper's
         "receiver chooses" policy.
@@ -195,7 +200,7 @@ class NodeRuntime:
 
     def __init__(self, system: ActorSystem, name: Optional[str] = None,
                  listen: Optional[Tuple[str, int]] = None, *,
-                 compress: bool = False, unspill_device=None,
+                 compress: Any = False, unspill_device=None,
                  heartbeat_interval: float = 1.0,
                  heartbeat_timeout: float = 5.0,
                  rpc_timeout: Any = _UNSET):
@@ -331,13 +336,18 @@ class NodeRuntime:
         return RemoteActorRef(self, peer, rid)
 
     def spawn_remote(self, peer: str, behavior, *args, publish=None,
+                     spawn_kwargs: Optional[dict] = None,
                      timeout: Any = _UNSET) -> RemoteActorRef:
         """Spawn ``behavior`` (a picklable callable / Actor subclass /
         KernelDecl) inside ``peer``'s actor system; optionally publish it
-        there under ``publish``. Returns the network-transparent handle."""
+        there under ``publish``. ``spawn_kwargs`` forwards keyword
+        arguments to the remote ``spawn`` (e.g. ``emit="ref"`` for a
+        kernel declaration placed cross-node by the graph builder).
+        Returns the network-transparent handle."""
         rid = self._rpc_result(peer,
                                self._rpc(peer, "spawn",
-                                         (behavior, args, publish)),
+                                         (behavior, args, publish,
+                                          spawn_kwargs or {})),
                                timeout, "spawn_remote")
         return RemoteActorRef(self, peer, rid)
 
@@ -436,15 +446,18 @@ class NodeRuntime:
             raise NodeDown(f"node {conn.peer} unreachable: {exc}") from exc
         self.stats["frames_out"] += 1
 
-    def _encode_payload(self, obj, consume: bool = False) -> bytes:
-        return wire.encode(obj, compress=self.compress, consume=consume)
+    def _encode_payload(self, obj, consume: bool = False,
+                        peer: Optional[str] = None) -> bytes:
+        return wire.encode(obj, compress=self.compress, consume=consume,
+                           peer=peer)
 
     def _decode_payload(self, blob: bytes):
         return wire.decode(blob, device=self.unspill_device)
 
     def _send_to(self, peer: str, rid, payload: tuple) -> None:
         conn = self._conn_for(peer)
-        self._write(conn, ("send", rid, self._encode_payload(payload)))
+        self._write(conn, ("send", rid,
+                           self._encode_payload(payload, peer=peer)))
 
     def _pending_request(self, peer: str, rid, make_frame) -> Future:
         """Shared request/reply plumbing: allocate a req_id, register the
@@ -452,7 +465,14 @@ class NodeRuntime:
         way (dead peer, payload encode error) fails the future instead of
         leaking a pending entry. ``rid`` tags actor requests (None for
         node-level rpc) so a runtime-refused reply can mark that actor
-        dead."""
+        dead.
+
+        Every successful round trip is reported to the placement
+        service's wire-cost model (payload bytes + elapsed seconds), so
+        the hop-latency/throughput estimates that drive cross-node graph
+        placement refine themselves from real traffic. The samples
+        include remote compute time, which the model treats as smoothed
+        upper bounds."""
         fut: Future = Future()
         req_id = next(self._req_ids)
         with self._lock:
@@ -467,17 +487,33 @@ class NodeRuntime:
                 self._pending.pop(req_id, None)
             _safe_set_exception(fut, exc if isinstance(exc, ActorFailed)
                                 else ActorFailed(str(exc)))
+            return fut
+        blob = frame[-1]
+        nbytes = len(blob) if isinstance(blob, (bytes, bytearray)) else 0
+        t0 = time.monotonic()
+        compressed = self.compress is True
+
+        def _observe(f: Future) -> None:
+            if f.cancelled() or f.exception() is not None:
+                return      # failures say nothing about hop cost
+            from repro.core.placement import service as placement_service
+            placement_service().observe_hop(
+                peer, nbytes, time.monotonic() - t0, compressed=compressed)
+
+        fut.add_done_callback(_observe)
         return fut
 
     def _request_to(self, peer: str, rid, payload: tuple) -> Future:
         return self._pending_request(
             peer, rid, lambda req_id: ("request", req_id, rid,
-                                       self._encode_payload(payload)))
+                                       self._encode_payload(payload,
+                                                            peer=peer)))
 
     def _rpc(self, peer: str, op: str, args: tuple) -> Future:
         return self._pending_request(
             peer, None, lambda req_id: ("rpc", req_id, op,
-                                        self._encode_payload(args)))
+                                        self._encode_payload(args,
+                                                             peer=peer)))
 
     def _exit_remote(self, ref: RemoteActorRef, reason: Any) -> None:
         self._write(self._conn_for(ref.peer),
@@ -801,7 +837,7 @@ class NodeRuntime:
         try:
             # consume=True: reply refs transfer ownership — spilled in
             # place so the sender's device buffer is dropped at the wire
-            blob = self._encode_payload(value, consume=True)
+            blob = self._encode_payload(value, consume=True, peer=peer)
         except Exception as exc:   # unserializable result
             ok, blob = False, self._encode_payload(_safe_reason(exc))
         try:
@@ -842,8 +878,10 @@ class NodeRuntime:
             return
         try:
             if op == "spawn":
-                behavior, sp_args, publish = args
-                ref = self.system.spawn(behavior, *sp_args)
+                # older peers send a 3-tuple (no spawn kwargs)
+                behavior, sp_args, publish = args[:3]
+                sp_kwargs = args[3] if len(args) > 3 else {}
+                ref = self.system.spawn(behavior, *sp_args, **sp_kwargs)
                 if publish:
                     self.publish(publish, ref)
                 fut.set_result(ref.actor_id)

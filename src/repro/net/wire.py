@@ -123,15 +123,26 @@ def _thaw(obj: Any, device) -> Any:
     return obj
 
 
-def encode(obj: Any, *, compress: bool = False, consume: bool = False
-           ) -> bytes:
+def encode(obj: Any, *, compress: Any = False, consume: bool = False,
+           peer: Optional[str] = None) -> bytes:
     """Serialize ``obj`` for the wire (see module doc for the ref policy).
 
     ``consume=True`` spills live refs in place (reply direction:
     ownership transfers); the default clones (request direction: sender
     retains residency for replay).
+
+    ``compress`` may be a bool (the node's static setting) or ``"auto"``,
+    in which case the spill-boundary choice is delegated per payload to
+    the process-wide placement service's wire-cost model: int8 is used
+    only when the payload is large enough that quantization amortizes the
+    bytes it saves on this (optionally ``peer``-specific) hop.
     """
-    return pickle.dumps(_freeze(obj, compress, consume),
+    if compress == "auto":
+        from repro.core.memref import payload_nbytes
+        from repro.core.placement import service as placement_service
+        compress = placement_service().choose_compress(
+            payload_nbytes(obj), peer)
+    return pickle.dumps(_freeze(obj, bool(compress), consume),
                         protocol=pickle.HIGHEST_PROTOCOL)
 
 

@@ -56,6 +56,7 @@ from repro.core.actor import ActorSystem
 from repro.core.api import ActorPool
 from repro.core.errors import DeadlineExceeded
 from repro.core.memref import DeviceRef, tree_release, tree_wrap
+from repro.core.placement import service as placement_service
 from repro.core.scheduler import ChunkScheduler
 
 from .batcher import Batcher
@@ -336,7 +337,13 @@ class ServeEngine:
         self._prefill_scheduler: Optional[ChunkScheduler] = None
         if pool is None:
             if device is None:
-                device = system.opencl_manager().find_device()
+                # worker placement goes through the cost-model service:
+                # least live bytes, then queue depth, deterministic
+                # name tie-break (one device on CPU CI, but a multi-GPU
+                # host steers new engines away from loaded devices)
+                device = placement_service().pick_device(
+                    system.opencl_manager().devices(),
+                    context="serve-engine").chosen
             if self._paged:
                 behavior = make_paged_decode_worker(step_fn, cache_pool)
                 self._prefill_behavior = make_prefill_worker(

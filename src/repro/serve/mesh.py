@@ -59,6 +59,7 @@ from repro.core.actor import (Actor, ActorRef, ActorSystem,
                               _safe_set_exception, _safe_set_result)
 from repro.analysis.runtime import make_lock
 from repro.core.errors import ActorError, ActorFailed, DownMessage
+from repro.core.placement import service as placement_service
 
 from .engine import EngineStopped, ServeEngine
 from .request import AdmissionError, QueueClosed
@@ -356,14 +357,16 @@ class MeshRouter:
             self._counters["prefix_routed"] += 1
             return max(live, key=lambda r: hashlib.md5(
                 f"{key}|{r.key}".encode()).digest())
-        # least expected wait: the polled EWMA queue-wait scaled by this
-        # router's own outstanding fan-in. The EWMA alone is stale
-        # between polls (a tight submit loop would pile every request on
-        # whichever replica looked idle at the last tick); inflight is
-        # always current, so it degrades a replica's score as requests
+        # keyless requests: least expected wait, ranked by the placement
+        # service from (EWMA queue-wait, this router's own inflight
+        # fan-in) snapshots — the same auditable cost source every other
+        # dispatcher queries. EWMA alone is stale between polls; inflight
+        # is always current, so it degrades a replica's score as requests
         # are routed to it
-        return min(live, key=lambda r: (r.wait_estimate() + 1e-3)
-                   * (1 + len(r.inflight)))
+        decision = placement_service().rank_replicas(
+            [(r.key, r.wait_estimate(), len(r.inflight)) for r in live],
+            context="mesh")
+        return next(r for r in live if r.key == decision.chosen)
 
     def _dispatch(self, req: _MeshRequest) -> None:
         with self._lock:
@@ -494,6 +497,12 @@ class MeshRouter:
         with self._lock:
             rep.load = snap
             rep.wait_ewma.update(float(snap.get("queue_wait_s", 0.0)))
+            # feed the snapshot into the placement service: replica load
+            # becomes just another cost source, and per-peer expected
+            # waits inform cross-node graph placement
+            placement_service().observe_replica(
+                rep.key, rep.wait_estimate(), len(rep.inflight),
+                peer=rep.peer, load={"queue_depth": snap.get("queue_depth")})
 
     def _autoscale(self) -> None:
         now = self._clock()

@@ -138,11 +138,22 @@ def test_canonical_order_parses_order_md():
     names = order_mod.CANONICAL_LOCK_ORDER
     assert names[0] == "MeshRouter"
     assert names[-1] == "RefRegistry"
-    assert len(names) == len(set(names)) >= 19
+    assert len(names) == len(set(names)) >= 20
     for expected in ("ChunkScheduler", "PagePool", "ActorState",
-                     "NodeRuntime", "GraphRun"):
+                     "NodeRuntime", "GraphRun", "PlacementService"):
         assert expected in names
     assert order_mod.rank_of("PagePool") < order_mod.rank_of("RefRegistry")
+    # the placement service is queried by every dispatcher (pool,
+    # scheduler, router, node runtime — all while holding their own
+    # locks) and reads live-bytes through the registry while held: its
+    # rank must sit strictly between DeviceManager and RefRegistry
+    assert (order_mod.rank_of("DeviceManager")
+            < order_mod.rank_of("PlacementService")
+            < order_mod.rank_of("RefRegistry"))
+    for outer in ("ActorPool", "ChunkScheduler", "MeshRouter",
+                  "NodeRuntime"):
+        assert order_mod.rank_of(outer) < \
+            order_mod.rank_of("PlacementService")
     assert order_mod.rank_of("not-a-lock") is None
     assert os.path.exists(order_mod.order_path())
 
@@ -172,8 +183,8 @@ def test_tracked_lock_cycle_fires(clean_lock_graph):
 
 
 def test_tracked_lock_canonical_rank_fires(clean_lock_graph):
-    reg = rt.TrackedLock("RefRegistry")   # rank 18
-    pool = rt.TrackedLock("PagePool")     # rank 9: must be taken first
+    reg = rt.TrackedLock("RefRegistry")   # rank 20
+    pool = rt.TrackedLock("PagePool")     # rank 11: must be taken first
     with reg:
         with pytest.raises(rt.LockOrderViolation, match="canonical"):
             pool.acquire()
